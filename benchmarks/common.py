@@ -1,0 +1,65 @@
+"""Shared experiment machinery for the paper-table benchmarks.
+
+Every benchmark runs Algorithm 1 on the synthetic stand-in datasets
+(DESIGN.md §changed assumptions) with the paper's hyper-parameter grid
+structure, reports rounds-to-target exactly as the paper computes it
+(monotone best-so-far curve + linear interpolation), and prints CSV.
+
+Scale knobs: --quick (CI-sized) vs --full (closer to paper budgets).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import FedAvgConfig, FederatedTrainer, make_eval_fn
+from repro.data import (
+    make_image_classification,
+    partition_iid,
+    partition_pathological_noniid,
+)
+from repro.models import mnist_2nn, mnist_cnn
+
+
+def mnist_setting(quick=True, seed=5):
+    # difficulty 2.5 calibrated so FedSGD needs O(10) rounds at the target
+    # while FedAvg(E=5,B=10) needs O(1) — preserving the paper's dynamic
+    # range at CI scale (the paper's absolute counts need 100 clients x 600
+    # examples x thousands of rounds).
+    n_train = 8000 if quick else 60000
+    n_test = 1200 if quick else 10000
+    n_clients = 40 if quick else 100
+    train, test, _ = make_image_classification(
+        n_train, n_test, seed=seed, difficulty=2.5
+    )
+    return train, test, n_clients
+
+
+def clients_for(train, fed, flatten=True):
+    out = []
+    for ix in fed.client_indices:
+        x = train.x[ix]
+        if flatten:
+            x = x.reshape(len(ix), -1)
+        out.append((x, train.y[ix]))
+    return out
+
+
+def run_setting(model_name, clients, test, cfg, rounds, target, flatten=True):
+    model = mnist_2nn() if model_name == "2nn" else mnist_cnn()
+    params = model.init(jax.random.PRNGKey(0))
+    xt = test.x.reshape(len(test.x), -1) if flatten else test.x
+    ev = make_eval_fn(model.apply, xt, test.y)
+    tr = FederatedTrainer(model.loss, params, clients, cfg, eval_fn=ev)
+    t0 = time.time()
+    h = tr.run(rounds, eval_every=1, target_acc=target)
+    wall = time.time() - t0
+    r = h.rounds_to_target(target)
+    best = max((rec.test_acc or 0) for rec in h.records)
+    return r, best, wall, h
+
+
+def emit(name, us_per_call, derived):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,66 @@
+"""Paper Figure 1: loss of theta*w + (1-theta)*w' over theta in [-0.2, 1.2]
+for parents trained from a SHARED vs INDEPENDENT random init on disjoint
+data. Prints the full interpolation curve as CSV."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import make_image_classification
+from repro.models import mnist_2nn
+
+from benchmarks.common import emit
+
+
+def main(quick=True, n_theta=50):
+    n = 1200 if quick else 6000
+    train, _, _ = make_image_classification(n, 100, seed=7, difficulty=1.5)
+    model = mnist_2nn()
+    xs = jnp.asarray(train.x.reshape(n, -1))
+    ys = jnp.asarray(train.y)
+
+    @jax.jit
+    def full_loss(p):
+        return model.loss(p, (xs, ys))[0]
+
+    def sgd_train(params, lo, hi, steps=240, lr=0.1, bs=50):
+        r = np.random.default_rng(0)
+
+        @jax.jit
+        def step(p, idx):
+            g = jax.grad(lambda pp: model.loss(pp, (xs[idx], ys[idx]))[0])(p)
+            return jax.tree.map(lambda a, b: a - lr * b, p, g)
+
+        for _ in range(steps):
+            params = step(params, jnp.asarray(r.integers(lo, hi, bs)))
+        return params
+
+    t0 = time.time()
+    thetas = np.linspace(-0.2, 1.2, n_theta)
+    for mode in ("shared", "independent"):
+        if mode == "shared":
+            init = model.init(jax.random.PRNGKey(0))
+            w1 = sgd_train(init, 0, n // 2)
+            w2 = sgd_train(init, n // 2, n)
+        else:
+            w1 = sgd_train(model.init(jax.random.PRNGKey(1)), 0, n // 2)
+            w2 = sgd_train(model.init(jax.random.PRNGKey(2)), n // 2, n)
+        losses = []
+        for th in thetas:
+            mix = jax.tree.map(lambda a, b: th * a + (1 - th) * b, w1, w2)
+            losses.append(float(full_loss(mix)))
+        mid = losses[n_theta // 2]
+        ends = min(losses[int(0.2 / 1.4 * n_theta)], losses[int(1.2 / 1.4 * n_theta)])
+        emit(
+            f"fig1/{mode}",
+            (time.time() - t0) * 1e6,
+            "curve=" + "|".join(f"{th:.2f}:{l:.3f}" for th, l in zip(thetas, losses)),
+        )
+        print(f"# fig1/{mode}: loss(theta=0.5)={mid:.3f} best_parent~{ends:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Kernel microbenchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python),
+so wall-clock numbers here benchmark the pure-JAX reference paths that the
+dry-run lowers; the kernels' TPU performance is a roofline argument
+(EXPERIMENTS.md §Perf), not a CPU measurement. We still time kernel-
+interpret vs ref on tiny shapes to validate overhead accounting.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.models.attention_core import blocked_attention
+
+from benchmarks.common import emit
+
+
+def _time(f, *args, n=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(f(*args))
+    return (time.time() - t0) / n * 1e6
+
+
+def main(quick=True):
+    r = np.random.default_rng(0)
+    # blocked attention (the ref path the dry-run compiles)
+    B, S, H, K, D = 2, 1024, 8, 2, 64
+    q = jnp.asarray(r.normal(size=(B, S, H, D)).astype(np.float32))
+    k = jnp.asarray(r.normal(size=(B, S, K, D)).astype(np.float32))
+    v = jnp.asarray(r.normal(size=(B, S, K, D)).astype(np.float32))
+    f = jax.jit(lambda q, k, v: blocked_attention(q, k, v, q_chunk=256, k_chunk=256))
+    us = _time(f, q, k, v)
+    flops = 4 * B * S * S * H * D / 2  # causal
+    emit("kernels/blocked_attention_ref_1k", us, f"gflops_s={flops/us/1e3:.1f}")
+
+    # fedavg aggregation ref vs kernel-interpret (tiny)
+    st = jnp.asarray(r.normal(size=(8, 200_000)).astype(np.float32))
+    w = jnp.ones(8) / 8
+    f = jax.jit(lambda s, w: ref.fedavg_aggregate_ref(s, w))
+    us = _time(f, st, w)
+    emit("kernels/fedavg_agg_ref_1.6M", us, f"gbytes_s={st.size*4/us/1e3:.1f}")
+
+    # ssm scan ref
+    Bt, T, Dd, N = 2, 512, 128, 16
+    dt = jnp.asarray(np.abs(r.normal(size=(Bt, T, Dd))).astype(np.float32) * 0.1)
+    Bm = jnp.asarray(r.normal(size=(Bt, T, N)).astype(np.float32))
+    Cm = jnp.asarray(r.normal(size=(Bt, T, N)).astype(np.float32))
+    x = jnp.asarray(r.normal(size=(Bt, T, Dd)).astype(np.float32))
+    A = -jnp.asarray(np.abs(r.normal(size=(Dd, N))).astype(np.float32))
+    h0 = jnp.zeros((Bt, Dd, N))
+    f = jax.jit(lambda *a: ref.ssm_scan_ref(*a)[0])
+    us = _time(f, dt, Bm, Cm, x, A, h0)
+    emit("kernels/ssm_scan_ref_512", us, f"steps_per_s={T/us*1e6:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Render the roofline table from the dry-run JSON cache (deliverable g)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.launch.roofline import load_results, render_table
+
+from benchmarks.common import emit
+
+
+def main(quick=True, out_dir="results/dryrun"):
+    rows = load_results(out_dir)
+    if not rows:
+        print("# no dry-run results found — run scripts/run_dryruns.py first")
+        return
+    for r in rows:
+        ro = r["roofline"]
+        emit(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+            + (f"/{r['algo']}" if r.get("algo", "fedsgd") != "fedsgd" else ""),
+            max(ro["compute_s"], ro["memory_s"], ro["collective_s"]) * 1e6,
+            f"dominant={ro['dominant'].replace('_s','')};useful={ro['useful_flops_ratio']:.3f};"
+            f"fits={r['memory'].get('fits_hbm_analytic')}",
+        )
+    print("\n# Single-pod baseline table:\n")
+    print(render_table(rows, mesh="single"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark harness entrypoint: one function per paper table/figure plus
+the kernel microbenches and the roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table2,fig1]
+
+Prints ``name,us_per_call,derived`` CSV lines (# lines are commentary).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    fig1_averaging,
+    fig3_large_E,
+    kernels_bench,
+    roofline_report,
+    shakespeare_lstm,
+    table1_client_fraction,
+    table2_local_computation,
+    table3_cifar,
+)
+
+SUITES = {
+    "table1": table1_client_fraction.main,
+    "table2": table2_local_computation.main,
+    "table3": table3_cifar.main,
+    "fig1": fig1_averaging.main,
+    "fig3": fig3_large_E.main,
+    "shakespeare": shakespeare_lstm.main,
+    "kernels": kernels_bench.main,
+    "roofline": roofline_report.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale budgets")
+    ap.add_argument("--only", default=None, help="comma list of suite names")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            SUITES[name](quick=not args.full)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
+    if failed:
+        print(f"# FAILED suites: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

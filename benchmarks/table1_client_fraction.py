@@ -1,0 +1,44 @@
+"""Paper Table 1: effect of client fraction C (2NN, E=1), B=inf vs B=10,
+IID vs pathological non-IID. Reports rounds to the target accuracy and the
+speedup over the C~0 (single-client) baseline."""
+from __future__ import annotations
+
+from repro.core import FedAvgConfig
+from repro.data import partition_iid, partition_pathological_noniid
+
+from benchmarks.common import clients_for, emit, mnist_setting, run_setting
+
+
+def main(quick=True, target=0.75, rounds=22):
+    train, test, K = mnist_setting(quick)
+    parts = {
+        "iid": partition_iid(len(train.x), K, seed=0),
+        "noniid": partition_pathological_noniid(train.y, K, 2, seed=0),
+    }
+    results = {}
+    base = {}
+    for part_name, fed in parts.items():
+        clients = clients_for(train, fed)
+        for B, label in [(None, "Binf"), (10, "B10")]:
+            for C in (1.0 / K, 0.1, 0.2):
+                cfg = FedAvgConfig(C=C, E=1, B=B, lr=0.2 if B else 0.5)
+                r, best, wall, _ = run_setting("2nn", clients, test, cfg, rounds, target)
+                key = (part_name, label, round(C, 3))
+                results[key] = r
+                if C == 1.0 / K:
+                    base[(part_name, label)] = r
+                speed = (
+                    f"{base[(part_name, label)] / r:.1f}x"
+                    if r and base.get((part_name, label))
+                    else "-"
+                )
+                emit(
+                    f"table1/{part_name}/{label}/C={C:.2f}",
+                    wall * 1e6 / max(rounds, 1),
+                    f"rounds_to_{target}={r if r else 'none'};best={best:.3f};speedup={speed}",
+                )
+    return results
+
+
+if __name__ == "__main__":
+    main()

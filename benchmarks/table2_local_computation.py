@@ -1,0 +1,52 @@
+"""Paper Table 2 / Table 4: adding computation per client (E, B grid) vs the
+FedSGD baseline — the paper's headline 10-100x round reduction. u = E*n/(K*B)
+orders the rows exactly as in the paper."""
+from __future__ import annotations
+
+from repro.core import FedAvgConfig, fedsgd_config
+from repro.data import partition_iid, partition_pathological_noniid
+
+from benchmarks.common import clients_for, emit, mnist_setting, run_setting
+
+GRID = [
+    # (E, B) rows from Table 2 (2NN section of Table 4)
+    (1, None),   # FedSGD baseline
+    (5, None),
+    (1, 50),
+    (20, None),
+    (1, 10),
+    (5, 10),
+]
+
+
+def main(quick=True, target=0.75, rounds=30):
+    train, test, K = mnist_setting(quick)
+    n = len(train.x)
+    parts = {
+        "iid": partition_iid(n, K, seed=0),
+        "noniid": partition_pathological_noniid(train.y, K, 2, seed=0),
+    }
+    out = {}
+    for part_name, fed in parts.items():
+        clients = clients_for(train, fed)
+        base_rounds = None
+        for E, B in GRID:
+            cfg = FedAvgConfig(C=0.25 if quick else 0.1, E=E, B=B,
+                               lr=0.5 if B is None else 0.1)
+            r, best, wall, _ = run_setting("2nn", clients, test, cfg, rounds, target)
+            u = cfg.expected_updates_per_round(n, K)
+            if E == 1 and B is None:
+                base_rounds = r
+            speed = f"{base_rounds / r:.1f}x" if (r and base_rounds) else "-"
+            tag = f"E={E},B={'inf' if B is None else B}"
+            out[(part_name, tag)] = (r, speed)
+            emit(
+                f"table2/{part_name}/{tag}",
+                wall * 1e6 / max(rounds, 1),
+                f"u={u:.0f};rounds_to_{target}={r if r else 'none'};best={best:.3f};speedup={speed}",
+            )
+    return out
+
+
+if __name__ == "__main__":
+    main()

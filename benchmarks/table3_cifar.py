@@ -1,0 +1,70 @@
+"""Paper Table 3: CIFAR-10-like experiments — baseline sequential SGD vs
+FedSGD vs FedAvg rounds-to-target (synthetic 24x24x3 dataset, TF-tutorial
+CNN). Sequential SGD counts each minibatch as one communication round, as in
+the paper's comparison."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FedAvgConfig, FederatedTrainer, fedsgd_config, make_eval_fn
+from repro.data import make_image_classification, partition_iid
+from repro.models import cifar_cnn
+
+from benchmarks.common import emit
+
+
+def main(quick=True, target=0.55, rounds=8):
+    n_train, n_test, K = (2000, 400, 20) if quick else (50000, 10000, 100)
+    train, test, _ = make_image_classification(
+        n_train, n_test, image_shape=(24, 24, 3), seed=11, difficulty=1.2
+    )
+    model = cifar_cnn()
+    ev = make_eval_fn(model.apply, test.x, test.y)
+
+    # --- baseline: sequential SGD, minibatch 100, each batch = one "round"
+    params = model.init(jax.random.PRNGKey(0))
+    r = np.random.default_rng(0)
+    lr = 0.05
+
+    @jax.jit
+    def sgd_step(p, x, y):
+        g = jax.grad(lambda pp: model.loss(pp, (x, y))[0])(p)
+        return jax.tree.map(lambda a, gg: a - lr * gg, p, g)
+
+    sgd_rounds = None
+    t0 = time.time()
+    n_steps = rounds * 20
+    for step in range(n_steps):
+        b = r.choice(n_train, 100)
+        params = sgd_step(params, jnp.asarray(train.x[b]), jnp.asarray(train.y[b]))
+        if step % 20 == 19:
+            acc = float(ev(params)["acc"])
+            if acc >= target and sgd_rounds is None:
+                sgd_rounds = step + 1
+                break
+    emit("table3/sgd_b100", (time.time() - t0) * 1e6 / n_steps,
+         f"rounds_to_{target}={sgd_rounds or 'none'}")
+
+    # --- FedSGD / FedAvg
+    fed = partition_iid(n_train, K, seed=0)
+    clients = [(train.x[ix], train.y[ix]) for ix in fed.client_indices]
+    for name, cfg in [
+        ("fedsgd", fedsgd_config(C=0.25, lr=0.5, lr_decay=0.9934)),
+        ("fedavg_e3_b50", FedAvgConfig(C=0.25, E=3, B=50, lr=0.1, lr_decay=0.99)),
+    ]:
+        params = model.init(jax.random.PRNGKey(0))
+        tr = FederatedTrainer(model.loss, params, clients, cfg, eval_fn=ev)
+        t0 = time.time()
+        h = tr.run(rounds, eval_every=1, target_acc=target)
+        rr = h.rounds_to_target(target)
+        best = max((rec.test_acc or 0) for rec in h.records)
+        emit(f"table3/{name}", (time.time() - t0) * 1e6 / rounds,
+             f"rounds_to_{target}={rr if rr else 'none'};best={best:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+#!/usr/bin/env python
+"""Regenerate the data-driven sections of EXPERIMENTS.md from results/.
+
+Writes results/experiments_generated.md with §Dry-run and §Roofline tables;
+EXPERIMENTS.md includes the narrative + pasted tables (run this after sweeps
+and copy/refresh).
+"""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+from repro.launch.roofline import load_results, render_table  # noqa: E402
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_section(rows):
+    lines = [
+        "| arch | shape | mesh | algo | compile s | GFLOP/dev | coll GiB/dev | at-rest GiB/dev | act-est GiB/dev | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"], r.get("algo", ""))):
+        if "hillclimb" in r:
+            continue
+        m = r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('algo','fedsgd')} | "
+            f"{r['compile_s']:.0f} | {r['cost']['flops_per_device']/1e9:.1f} | "
+            f"{r['collectives']['loop_scaled']['total_bytes']/2**30:.2f} | "
+            f"{fmt_bytes(m.get('at_rest_bytes', m['argument_bytes']))} | "
+            f"{fmt_bytes(m.get('analytic_activation_bytes', 0))} | "
+            f"{'Y' if m.get('fits_hbm_analytic') else 'N'} |"
+        )
+    return "\n".join(lines)
+
+
+def hillclimb_section():
+    rows = []
+    for p in sorted(Path("results/hillclimb").glob("*.json")):
+        r = json.loads(p.read_text())
+        if "roofline" in r:  # skip auxiliary artifacts (pod_axis_attribution)
+            rows.append(r)
+    if not rows:
+        return "(no hillclimb results yet)"
+    lines = [
+        "| step | arch | shape | mesh | algo | compute s | memory s | collective s | dominant |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        ro = r["roofline"]
+        lines.append(
+            f"| {r.get('hillclimb','?')} | {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r.get('algo','fedsgd')} | {ro['compute_s']:.3e} | {ro['memory_s']:.3e} | "
+            f"{ro['collective_s']:.3e} | {ro['dominant'].replace('_s','')} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    rows = load_results("results/dryrun")
+    out = Path("results/experiments_generated.md")
+    parts = [
+        "## Generated tables (scripts/build_experiments_md.py)\n",
+        "### Dry-run (all meshes)\n",
+        dryrun_section(rows),
+        "\n### Roofline — single-pod baselines\n",
+        render_table(rows, mesh="single"),
+        "\n### Hillclimb steps\n",
+        hillclimb_section(),
+    ]
+    out.write_text("\n".join(parts) + "\n")
+    print(f"wrote {out} ({len(rows)} dry-run rows)")
+
+
+if __name__ == "__main__":
+    main()

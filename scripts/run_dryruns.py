@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""Sequential dry-run sweep driver: every (arch x shape x mesh), smallest
+archs first, one subprocess per combo (isolates compiler memory, makes
+progress restartable via --skip-existing semantics)."""
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ARCH_ORDER = [
+    "xlstm-350m",
+    "gemma-2b",
+    "seamless-m4t-medium",
+    "deepseek-v2-lite-16b",
+    "gemma-7b",
+    "qwen2-vl-7b",
+    "minitron-8b",
+    "jamba-v0.1-52b",
+    "qwen2-72b",
+    "deepseek-v3-671b",
+]
+SHAPE_ORDER = ["decode_32k", "long_500k", "prefill_32k", "train_4k"]
+OUT = Path("results/dryrun")
+
+
+def main():
+    meshes = sys.argv[1:] or ["single", "multi"]
+    log = open("results/dryrun_sweep.log", "a")
+    for mesh in meshes:
+        for arch in ARCH_ORDER:
+            for shape in SHAPE_ORDER:
+                path = OUT / f"{arch}__{shape}__{mesh}.json"
+                if path.exists():
+                    print(f"[skip] {path.name}", flush=True)
+                    continue
+                t0 = time.time()
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--mesh", mesh]
+                if mesh == "multi":
+                    # multi-pod is a pass/fail sweep (roofline table is
+                    # single-pod); scan-over-layers keeps compiles fast
+                    cmd.append("--scan")
+                r = subprocess.run(
+                    cmd,
+                    env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+                         "HOME": "/root"},
+                    capture_output=True, text=True, timeout=3600,
+                )
+                dt = time.time() - t0
+                status = "ok" if r.returncode == 0 else "FAIL"
+                tail = r.stdout.strip().splitlines()[-1:] or [""]
+                msg = f"[{status}] {arch} {shape} {mesh} {dt:.0f}s :: {tail[0][:160]}"
+                print(msg, flush=True)
+                log.write(msg + "\n")
+                if r.returncode != 0:
+                    err = "\n".join(r.stderr.strip().splitlines()[-12:])
+                    log.write(err + "\n")
+                    log.flush()
+    print("sweep done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+#!/usr/bin/env python
+"""§Perf hillclimbs: the three chosen (arch x shape) pairs, iterated with the
+hypothesis -> change -> re-lower -> validate loop. Each step is one dryrun
+subprocess writing results/hillclimb/<tag>.json; EXPERIMENTS.md §Perf is
+written from these.
+
+Chosen pairs (from the 40-pair baseline table):
+  A. qwen2-72b x train_4k, MULTI-pod — the pair most representative of the
+     paper's technique: FedSGD per-step sync vs FedAvg(H) round steps; the
+     collective term is the paper's "communication rounds" in roofline form.
+  B. gemma-2b x decode_32k, single-pod — most collective-bound baseline:
+     the vocab-sharded embedding gather degenerates to a full-table
+     all-gather per step ("involuntary full rematerialization").
+  C. gemma-2b x train_4k, single-pod — worst useful-FLOPs fraction (8 heads
+     cannot tensor-shard over tp=16; attention computes 16x replicated).
+"""
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+OUT = "results/hillclimb"
+
+STEPS = [
+    # --- A: paper technique (multi-pod FedSGD vs FedAvg local steps) -------
+    # NOTE: scan_layers for A — the quantity compared (pod-axis collective
+    # bytes OUTSIDE the local-step loop) is loop-invariant; see EXPERIMENTS.
+    dict(tag="A0_fedsgd_baseline", args=["--arch", "gemma-2b", "--shape", "train_4k",
+         "--mesh", "multi", "--algo", "fedsgd"]),
+    dict(tag="A1_fedavg_h8", args=["--arch", "gemma-2b", "--shape", "train_4k",
+         "--mesh", "multi", "--algo", "fedavg", "--local-steps", "8"]),
+    dict(tag="A2_fedavg_h16", args=["--arch", "gemma-2b", "--shape", "train_4k",
+         "--mesh", "multi", "--algo", "fedavg", "--local-steps", "16"]),
+    dict(tag="A3_fedavg_h4", args=["--arch", "gemma-2b", "--shape", "train_4k",
+         "--mesh", "multi", "--algo", "fedavg", "--local-steps", "4"]),
+    # --- B: decode embedding gather ----------------------------------------
+    dict(tag="B1_embed_onehot", args=["--arch", "gemma-2b", "--shape", "decode_32k",
+         "--mesh", "single", "--override", "embed_onehot=True"]),
+    dict(tag="B2_embed_onehot_72b", args=["--arch", "qwen2-72b", "--shape", "decode_32k",
+         "--mesh", "single", "--override", "embed_onehot=True"]),
+    # --- C: head-gated attention on the model axis -------------------------
+    dict(tag="C1_attn_batch_reshard", args=["--arch", "gemma-2b", "--shape", "train_4k",
+         "--mesh", "single", "--override", "shard_attn_batch_over_model=True"]),
+    dict(tag="C2_attn_reshard_qchunk", args=["--arch", "gemma-2b", "--shape", "train_4k",
+         "--mesh", "single", "--override", "shard_attn_batch_over_model=True",
+         "--override", "attn_q_chunk=2048", "--override", "attn_k_chunk=2048"]),
+]
+
+
+def main():
+    only = sys.argv[1:]
+    for step in STEPS:
+        if only and not any(step["tag"].startswith(o) for o in only):
+            continue
+        path = Path(OUT)
+        t0 = time.time()
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--out", OUT,
+               "--tag", step["tag"]] + step["args"]
+        if step["tag"].startswith("A"):
+            cmd.append("--scan")
+        r = subprocess.run(cmd, capture_output=True, text=True, timeout=3600,
+                           env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                                "HOME": "/root"})
+        ok = "ok" if r.returncode == 0 else "FAIL"
+        print(f"[{ok}] {step['tag']} {time.time()-t0:.0f}s")
+        if r.returncode:
+            print(r.stderr[-1500:])
+    print("hillclimbs done")
+
+
+if __name__ == "__main__":
+    main()

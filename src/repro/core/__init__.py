@@ -1,0 +1,14 @@
+from repro.core.fedavg import (
+    FedAvgConfig,
+    client_update,
+    server_aggregate,
+    sample_clients,
+    fedavg_round,
+)
+from repro.core.simulation import FederatedTrainer, History, make_eval_fn
+from repro.core.losses import softmax_cross_entropy, accuracy, classification_loss, lm_loss
+
+
+def fedsgd_config(C: float = 0.1, lr: float = 0.1, **kw) -> FedAvgConfig:
+    """FedSGD == FedAvg with E=1, B=inf (paper Section 2)."""
+    return FedAvgConfig(C=C, E=1, B=None, lr=lr, **kw)

@@ -1,0 +1,110 @@
+"""FederatedAveraging — Algorithm 1 of McMahan et al. (AISTATS 2017).
+
+The three pieces of the algorithm, as composable jit-able functions:
+
+- ``client_update``      ClientUpdate(k, w): E epochs of minibatch SGD on the
+                         client's local data, starting from the global model.
+- ``server_aggregate``   w_{t+1} = sum_k (n_k / n) w^k_{t+1}.
+- ``sample_clients``     S_t = random set of m = max(C*K, 1) clients.
+
+``FedAvgConfig(E=1, B=None)`` is exactly FedSGD (one full-batch gradient step
+per round), the paper's baseline — tests assert this equivalence to machine
+precision.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.optimizers import Optimizer, apply_updates, sgd
+from repro.utils.tree import tree_weighted_mean
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvgConfig:
+    """Paper hyper-parameters (Section 2).
+
+    C: fraction of clients per round; the server samples m = max(C*K, 1).
+    E: local epochs per round.
+    B: local minibatch size; None means B = inf (full local batch).
+    lr: client SGD learning rate (float or step->lr schedule over ROUNDS).
+    lr_decay: optional per-round multiplicative decay (CIFAR experiments).
+    """
+
+    C: float = 0.1
+    E: int = 1
+    B: Optional[int] = 10
+    lr: float = 0.1
+    lr_decay: float = 1.0
+    seed: int = 0
+
+    def expected_updates_per_round(self, n: int, K: int) -> float:
+        """u = E * n / (K * B) — Table 2's ordering statistic."""
+        b = self.B if self.B is not None else n / K
+        return self.E * n / (K * b)
+
+
+def sample_clients(rng: np.random.Generator, n_clients: int, C: float) -> np.ndarray:
+    """S_t <- random set of m clients, m = max(C*K, 1)."""
+    m = max(int(round(C * n_clients)), 1)
+    return rng.choice(n_clients, size=m, replace=False)
+
+
+def client_update(
+    loss_fn: Callable,
+    params,
+    batches,
+    step_mask,
+    lr,
+) -> Any:
+    """ClientUpdate(k, w) — Algorithm 1, right column.
+
+    ``batches``: pytree of arrays with leading (n_steps, B, ...) axis holding
+    the client's full E-epoch batch schedule. ``step_mask``: (n_steps,) 0/1
+    float — padded steps (for vmap-ing ragged clients together) are no-ops.
+    Plain SGD with fixed per-round lr, as in the paper.
+    """
+
+    def one_step(w, inp):
+        batch, mask = inp
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(w, batch)
+        w = jax.tree.map(lambda p, g: p - lr * mask * g, w, grads)
+        return w, loss
+
+    params, losses = jax.lax.scan(one_step, params, (batches, step_mask))
+    return params, losses
+
+
+def server_aggregate(stacked_params, client_weights):
+    """w_{t+1} <- sum_k (n_k/n) w^k_{t+1} (weights normalized over S_t)."""
+    return tree_weighted_mean(stacked_params, client_weights)
+
+
+@partial(jax.jit, static_argnums=(0,))
+def fedavg_round(loss_fn, params, batches, step_mask, client_weights, lr):
+    """One synchronous round over the m sampled clients (vmapped).
+
+    batches leaves: (m, n_steps, B, ...); step_mask: (m, n_steps);
+    client_weights: (m,) raw example counts n_k.
+    Returns (new_global_params, mean_train_loss).
+    """
+    upd = jax.vmap(lambda b, msk: client_update(loss_fn, params, b, msk, lr))
+    client_params, losses = upd(batches, step_mask)
+    new_params = server_aggregate(client_params, client_weights)
+    # Mean loss over real (unmasked) steps, weighted by client size.
+    w = client_weights / jnp.sum(client_weights)
+    per_client = jnp.sum(losses * step_mask, axis=1) / jnp.maximum(
+        jnp.sum(step_mask, axis=1), 1.0
+    )
+    return new_params, jnp.sum(w * per_client)
+
+
+def one_shot_average(loss_fn, params, client_batches, client_masks, weights, lr):
+    """The degenerate endpoint discussed in Related Work: train each client
+    to convergence locally once, average once. Provided as a baseline."""
+    return fedavg_round(loss_fn, params, client_batches, client_masks, weights, lr)

@@ -1,0 +1,40 @@
+"""Losses / metrics shared by the paper models and the transformer substrate."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean CE over all leading axes. labels are int class ids."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def classification_loss(apply_fn):
+    """loss(params, batch=(x, y)) -> (loss, aux) for image classifiers."""
+
+    def loss(params, batch):
+        x, y = batch
+        logits = apply_fn(params, x)
+        return softmax_cross_entropy(logits, y), {"acc": accuracy(logits, y)}
+
+    return loss
+
+
+def lm_loss(apply_fn):
+    """loss(params, batch=(tokens, labels)) for next-token LMs.
+    apply_fn(params, tokens) -> (B, S, V) logits."""
+
+    def loss(params, batch):
+        x, y = batch
+        logits = apply_fn(params, x)
+        return softmax_cross_entropy(logits, y), {"acc": accuracy(logits, y)}
+
+    return loss

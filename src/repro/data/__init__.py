@@ -1,0 +1,13 @@
+from repro.data.synthetic import (
+    make_image_classification,
+    make_char_corpus,
+    make_word_corpus,
+)
+from repro.data.partition import (
+    partition_iid,
+    partition_pathological_noniid,
+    partition_dirichlet,
+    partition_unbalanced,
+    FederatedDataset,
+)
+from repro.data.batching import batch_iterator, client_epoch_batches

@@ -1,0 +1,68 @@
+"""Client-side batching for ClientUpdate (Algorithm 1).
+
+``client_epoch_batches`` materializes the exact batch schedule of
+Algorithm 1's ClientUpdate: split P_k into batches of size B, iterate E
+epochs (reshuffling each epoch). B=None means B=inf — the full local dataset
+as one batch (the FedSGD endpoint).
+
+For jit-friendly fixed-shape training we produce a single stacked array of
+shape (n_steps, B, ...) padded by *resampling with replacement* within the
+client's own data for the final ragged batch (standard simulation practice;
+weights n_k used by the server are unaffected).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def client_epoch_batches(
+    x: np.ndarray,
+    y: Optional[np.ndarray],
+    batch_size: Optional[int],
+    epochs: int,
+    seed: int,
+):
+    """Returns (bx, by) with shapes (n_steps, B, ...) covering E epochs."""
+    rng = np.random.default_rng(seed)
+    n = len(x)
+    b = n if batch_size is None else min(batch_size, n)
+    steps_per_epoch = max(n // b, 1) if batch_size is not None else 1
+    xs, ys = [], []
+    for _ in range(epochs):
+        perm = rng.permutation(n)
+        for s in range(steps_per_epoch):
+            idx = perm[s * b : (s + 1) * b]
+            if len(idx) < b:  # ragged tail: resample within client
+                extra = rng.integers(0, n, b - len(idx))
+                idx = np.concatenate([idx, extra])
+            xs.append(x[idx])
+            if y is not None:
+                ys.append(y[idx])
+    bx = np.stack(xs)
+    by = np.stack(ys) if y is not None else None
+    return bx, by
+
+
+def batch_iterator(x, y, batch_size, seed=0, drop_last=True):
+    rng = np.random.default_rng(seed)
+    n = len(x)
+    while True:
+        perm = rng.permutation(n)
+        for s in range(n // batch_size if drop_last else (n + batch_size - 1) // batch_size):
+            idx = perm[s * batch_size : (s + 1) * batch_size]
+            yield (x[idx], y[idx] if y is not None else None)
+
+
+def windows_from_sequence(seq: np.ndarray, unroll: int):
+    """Cut a 1-D token array into (n, unroll+1) windows: inputs seq[:, :-1],
+    labels seq[:, 1:]. Used for the char/word LMs (paper unroll 80 / 10)."""
+    n = (len(seq) - 1) // unroll
+    if n <= 0:
+        # Pad tiny client datasets by tiling.
+        reps = int(np.ceil((unroll + 1) / max(len(seq), 1)))
+        seq = np.tile(seq, reps + 1)
+        n = (len(seq) - 1) // unroll
+    w = np.stack([seq[i * unroll : i * unroll + unroll + 1] for i in range(n)])
+    return w[:, :-1].astype(np.int32), w[:, 1:].astype(np.int32)

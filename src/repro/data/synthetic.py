@@ -1,0 +1,189 @@
+"""Procedural datasets standing in for MNIST / CIFAR-10 / Shakespeare.
+
+The container is offline, so we synthesize datasets with the same shapes,
+cardinalities and federated structure as the paper's, hard enough that the
+paper's models have to *learn* (non-trivial Bayes error, class overlap,
+within-class variation) but learnable to high accuracy in CI-scale budgets.
+
+- image classification: class-template images + per-sample affine jitter +
+  pixel noise + distractor structure (stands in for MNIST 28x28x1 and
+  CIFAR 32x32x3).
+- char corpus: a first-order Markov chain (sharp Dirichlet transitions) over
+  a 70-symbol alphabet with per-"role" style vectors (stands in for
+  Shakespeare, incl. the unbalanced per-role client structure). First-order
+  keeps the context table small enough that the paper's char-LSTM reaches
+  high accuracy within CI-scale round budgets.
+- word corpus: Zipf-distributed vocabulary with latent topic mixtures per
+  author (stands in for the large-scale social-network post dataset).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ArrayDataset:
+    x: np.ndarray
+    y: np.ndarray
+
+    def __len__(self):
+        return len(self.x)
+
+
+def make_image_classification(
+    n_train: int = 60_000,
+    n_test: int = 10_000,
+    *,
+    image_shape=(28, 28, 1),
+    n_classes: int = 10,
+    seed: int = 0,
+    difficulty: float = 1.0,
+):
+    """MNIST-like synthetic image classification.
+
+    Each class c has a smooth random template T_c; a sample is a randomly
+    shifted, scaled copy of its template plus Gaussian noise and a shared
+    background pattern. ``difficulty`` scales the noise.
+    """
+    rng = np.random.default_rng(seed)
+    h, w, ch = image_shape
+    # Smooth templates: low-frequency random fields, upsampled.
+    low = rng.normal(size=(n_classes, 7, 7, ch)).astype(np.float32)
+    templates = np.stack(
+        [_upsample(low[c], (h, w)) for c in range(n_classes)], axis=0
+    )
+    templates /= np.maximum(np.abs(templates).max(axis=(1, 2, 3), keepdims=True), 1e-6)
+
+    def gen(n, rng):
+        y = rng.integers(0, n_classes, size=n)
+        shifts = rng.integers(-3, 4, size=(n, 2))
+        scale = rng.uniform(0.7, 1.3, size=(n, 1, 1, 1)).astype(np.float32)
+        noise = rng.normal(0, 0.35 * difficulty, size=(n, h, w, ch)).astype(np.float32)
+        x = np.empty((n, h, w, ch), np.float32)
+        for i in range(n):
+            x[i] = np.roll(templates[y[i]], tuple(shifts[i]), axis=(0, 1))
+        x = x * scale + noise
+        return ArrayDataset(x=x, y=y.astype(np.int32))
+
+    return gen(n_train, rng), gen(n_test, rng), templates
+
+
+def _upsample(img: np.ndarray, hw) -> np.ndarray:
+    """Bilinear upsample (h0,w0,c) -> (h,w,c) with numpy only."""
+    h0, w0, c = img.shape
+    h, w = hw
+    yi = np.linspace(0, h0 - 1, h)
+    xi = np.linspace(0, w0 - 1, w)
+    y0 = np.floor(yi).astype(int)
+    x0 = np.floor(xi).astype(int)
+    y1 = np.minimum(y0 + 1, h0 - 1)
+    x1 = np.minimum(x0 + 1, w0 - 1)
+    wy = (yi - y0)[:, None, None]
+    wx = (xi - x0)[None, :, None]
+    top = img[y0][:, x0] * (1 - wx) + img[y0][:, x1] * wx
+    bot = img[y1][:, x0] * (1 - wx) + img[y1][:, x1] * wx
+    return (top * (1 - wy) + bot * wy).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Character-level corpus (Shakespeare stand-in)
+# ---------------------------------------------------------------------------
+
+CHAR_VOCAB = (
+    "abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ .,;:!?'-\n0123456789"
+)
+CHAR_VOCAB_SIZE = len(CHAR_VOCAB)  # 70
+
+
+def make_char_corpus(
+    n_roles: int = 1146,
+    *,
+    mean_chars_per_role: int = 3_110,  # ~3.56M train chars total, as in paper
+    seed: int = 0,
+    n_styles: int = 8,
+):
+    """Order-2 Markov-chain character corpus with per-role 'style'.
+
+    Roles (clients) draw their text from one of ``n_styles`` transition
+    matrices (mixed with a shared base), making the natural per-role
+    partition genuinely non-IID, as with Shakespeare speaking roles. Role
+    sizes follow a log-normal — heavily unbalanced like the paper's data.
+    Returns (list of per-role train strings-as-int-arrays, list of test
+    arrays, vocab_size).
+    """
+    rng = np.random.default_rng(seed)
+    V = CHAR_VOCAB_SIZE
+    base = rng.dirichlet(np.full(V, 0.02), size=V).astype(np.float32)
+    styles = [
+        rng.dirichlet(np.full(V, 0.02), size=V).astype(np.float32)
+        for _ in range(n_styles)
+    ]
+
+    sizes = rng.lognormal(mean=np.log(mean_chars_per_role), sigma=1.0, size=n_roles)
+    sizes = np.maximum(sizes.astype(int), 64)
+
+    train, test = [], []
+    for r in range(n_roles):
+        style = styles[r % n_styles]
+        trans = 0.5 * base + 0.5 * style
+        n = int(sizes[r])
+        seq = _markov_sample(trans, n, rng)
+        split = max(int(0.8 * n), 1)
+        train.append(seq[:split])
+        test.append(seq[split:] if split < n else seq[-16:])
+    return train, test, V
+
+
+def _markov_sample(trans: np.ndarray, n: int, rng) -> np.ndarray:
+    """First-order chain: trans is (V, V) rows P(next | prev)."""
+    V = trans.shape[-1]
+    out = np.empty(n, np.int32)
+    out[0] = rng.integers(V)
+    cdf = np.cumsum(trans, axis=-1)
+    u = rng.random(n)
+    for i in range(1, n):
+        row = cdf[out[i - 1]]
+        out[i] = np.searchsorted(row, u[i] * row[-1])
+    return np.minimum(out, V - 1)
+
+
+# ---------------------------------------------------------------------------
+# Word-level corpus (large-scale social post stand-in)
+# ---------------------------------------------------------------------------
+
+
+def make_word_corpus(
+    n_authors: int = 512,
+    *,
+    vocab_size: int = 10_000,
+    mean_words_per_author: int = 1_000,
+    n_topics: int = 16,
+    seed: int = 0,
+):
+    """Zipf vocabulary + per-author topic mixture; returns per-author int
+    arrays (train, test) and vocab size."""
+    rng = np.random.default_rng(seed)
+    zipf = 1.0 / np.arange(1, vocab_size + 1) ** 1.1
+    topics = []
+    for _ in range(n_topics):
+        boost = np.zeros(vocab_size)
+        idx = rng.integers(0, vocab_size, size=vocab_size // 20)
+        boost[idx] = rng.uniform(5, 50, size=len(idx))
+        p = zipf * (1 + boost)
+        topics.append(p / p.sum())
+    topics = np.stack(topics)
+
+    sizes = np.maximum(
+        rng.lognormal(np.log(mean_words_per_author), 0.8, n_authors).astype(int), 32
+    )
+    train, test = [], []
+    for a in range(n_authors):
+        mix = rng.dirichlet(np.full(n_topics, 0.3))
+        p = mix @ topics
+        seq = rng.choice(vocab_size, size=int(sizes[a]), p=p).astype(np.int32)
+        split = max(int(0.8 * len(seq)), 1)
+        train.append(seq[:split])
+        test.append(seq[split:] if split < len(seq) else seq[-8:])
+    return train, test, vocab_size

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: fused cross-entropy over huge vocabularies.
+
+The memory-roofline killer for the assigned archs is the (tokens, vocab)
+logit tensor (256k vocab x 1M tokens = 2 TB in bf16). This kernel never
+materializes it: the grid walks (token_block, vocab_block) with the vocab
+axis innermost, computing the logits tile on the MXU (hidden tile x head
+tile), maintaining online max / sum-exp statistics in VMEM scratch, and
+picking out the gold logit where the label lands in the current vocab tile.
+The per-token loss lands on the last vocab step: loss = lse - gold.
+
+(Beyond-paper optimization — the paper's models have tiny vocabularies, but
+the production substrate needs this for every assigned arch; see
+EXPERIMENTS.md §Perf.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ce_kernel(h_ref, w_ref, lbl_ref, loss_ref, m_scr, l_scr, g_scr, *,
+               block_t, block_v, vocab):
+    j = pl.program_id(1)
+    nv = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        g_scr[...] = jnp.full_like(g_scr, NEG_INF)
+
+    h = h_ref[...].astype(jnp.float32)               # (bt, d)
+    w = w_ref[...].astype(jnp.float32)               # (d, bv)
+    logits = h @ w                                   # (bt, bv)
+    vpos = j * block_v + jax.lax.broadcasted_iota(jnp.int32, (block_t, block_v), 1)
+    logits = jnp.where(vpos < vocab, logits, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    l_scr[...] = l_scr[...] * jnp.exp(m_prev - m_new) + jnp.sum(
+        jnp.exp(logits - m_new[:, None]), axis=-1
+    )
+    m_scr[...] = m_new
+
+    lbl = lbl_ref[...]                               # (bt,)
+    hit = vpos == lbl[:, None]
+    gold_here = jnp.max(jnp.where(hit, logits, NEG_INF), axis=-1)
+    g_scr[...] = jnp.maximum(g_scr[...], gold_here)
+
+    @pl.when(j == nv - 1)
+    def _finalize():
+        lse = m_scr[...] + jnp.log(jnp.maximum(l_scr[...], 1e-30))
+        loss_ref[...] = (lse - g_scr[...]).astype(loss_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_v", "interpret"))
+def fused_cross_entropy(
+    hidden: jnp.ndarray,   # (T, d)
+    head: jnp.ndarray,     # (d, V)
+    labels: jnp.ndarray,   # (T,) int32
+    *,
+    block_t: int = 256,
+    block_v: int = 2048,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Per-token CE losses (T,); mean-reduce in the caller."""
+    T, d = hidden.shape
+    V = head.shape[1]
+    block_t = min(block_t, T)
+    block_v = min(block_v, V)
+    pad_t = (-T) % block_t
+    pad_v = (-V) % block_v
+    if pad_t:
+        hidden = jnp.pad(hidden, ((0, pad_t), (0, 0)))
+        labels = jnp.pad(labels, ((0, pad_t),))
+    if pad_v:
+        head = jnp.pad(head, ((0, 0), (0, pad_v)))
+    nt = hidden.shape[0] // block_t
+    nv = head.shape[1] // block_v
+    kern = functools.partial(
+        _ce_kernel, block_t=block_t, block_v=block_v, vocab=V
+    )
+    losses = pl.pallas_call(
+        kern,
+        grid=(nt, nv),
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, block_v), lambda i, j: (0, j)),
+            pl.BlockSpec((block_t,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_t,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nt * block_t,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_t,), jnp.float32),
+            pltpu.VMEM((block_t,), jnp.float32),
+            pltpu.VMEM((block_t,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(hidden, head, labels)
+    return losses[:T]

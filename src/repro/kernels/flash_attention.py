@@ -1,0 +1,123 @@
+"""Pallas TPU flash-attention kernel (forward).
+
+TPU adaptation notes (DESIGN.md §Hardware adaptation): the original flash
+attention is a CUDA shared-memory algorithm; on TPU the same online-softmax
+tiling maps to VMEM-resident (block_q x d) / (block_k x d) tiles feeding the
+MXU, with the m/l statistics kept in VMEM scratch across the key-block loop
+(the grid's innermost dimension). Block sizes default to 128 — the MXU
+systolic dimension — and d is kept whole per tile (d <= 256 for all assigned
+archs).
+
+Layout: q (B*H, S, D) — callers fold batch and heads (and broadcast GQA KV
+heads) in ops.py. The kernel grid is (BH, nq, nk) with k innermost; the
+output tile is revisited across k-steps (standard Pallas accumulation
+pattern) and finalized on the last k-step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, block_q, block_k, causal, window, seq_k):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                  # (bk, d)
+    s = q @ k.T                                       # (bq, bk) on the MXU
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < seq_k
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,  # (BH, Sq, D)
+    k: jnp.ndarray,  # (BH, Sk, D)
+    v: jnp.ndarray,  # (BH, Sk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    nq = q.shape[1] // block_q
+    nk = k.shape[1] // block_k
+
+    kern = functools.partial(
+        _flash_kernel,
+        scale=1.0 / np.sqrt(D),
+        block_q=block_q,
+        block_k=block_k,
+        causal=causal,
+        window=window,
+        seq_k=Sk,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, nq * block_q, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

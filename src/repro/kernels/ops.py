@@ -1,0 +1,86 @@
+"""jit'd model-facing wrappers around the Pallas kernels.
+
+These adapt model-layout tensors to kernel layouts (fold batch/heads,
+broadcast GQA KV, flatten parameter pytrees) and expose ``interpret`` so the
+CPU test environment executes the kernel bodies in Python. On real TPU
+hardware, set interpret=False (the default) and these become the hot path;
+the pure-JAX implementations in models/ remain the lowering used by the
+dry-run (kernels do not lower on the CPU SPMD backend).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ce_loss import fused_cross_entropy
+from repro.kernels.fedavg_agg import fedavg_aggregate
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssm_scan import ssm_scan
+
+
+def mha_flash(q, k, v, *, causal=True, window=0, block_q=128, block_k=128,
+              interpret=False):
+    """(B, S, H, D) x (B, S, K, D) GQA attention via the flash kernel."""
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, -1, D)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, -1, D)
+    out = flash_attention(
+        qf, kf, vf, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+
+
+def tree_fedavg_aggregate(stacked_params, weights, *, interpret=False):
+    """Weighted-average a pytree whose leaves are (K, ...) stacked client
+    params — Algorithm 1's server line, flattened through the Pallas kernel."""
+    leaves, treedef = jax.tree.flatten(stacked_params)
+    K = leaves[0].shape[0]
+    flat = jnp.concatenate([l.reshape(K, -1) for l in leaves], axis=1)
+    w = weights / jnp.sum(weights)
+    avg = fedavg_aggregate(flat, w, interpret=interpret)
+    out, off = [], 0
+    for l in leaves:
+        n = int(l[0].size)
+        out.append(avg[off : off + n].reshape(l.shape[1:]).astype(l.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def mamba_ssm_scan(dt, Bm, Cm, x, A, h0, *, chunk=0, interpret=False):
+    """Selective scan with optional sequence chunking (keeps (T, block_d)
+    tiles VMEM-sized for long sequences)."""
+    if not chunk or dt.shape[1] <= chunk:
+        return ssm_scan(dt, Bm, Cm, x, A, h0, interpret=interpret)
+    T = dt.shape[1]
+    n = T // chunk
+
+    def body(h, sl):
+        dt_c, b_c, c_c, x_c = sl
+        y, h = ssm_scan(dt_c, b_c, c_c, x_c, A, h, interpret=interpret)
+        return h, y
+
+    resh = lambda a: a[:, : n * chunk].reshape(
+        (a.shape[0], n, chunk) + a.shape[2:]
+    ).swapaxes(0, 1)
+    h, ys = jax.lax.scan(body, h0, (resh(dt), resh(Bm), resh(Cm), resh(x)))
+    y = ys.swapaxes(0, 1).reshape(dt.shape[0], n * chunk, -1)
+    if n * chunk < T:
+        y_t, h = ssm_scan(
+            dt[:, n * chunk :], Bm[:, n * chunk :], Cm[:, n * chunk :],
+            x[:, n * chunk :], A, h, interpret=interpret,
+        )
+        y = jnp.concatenate([y, y_t], axis=1)
+    return y, h
+
+
+def ce_loss_mean(hidden, head, labels, *, interpret=False):
+    """(B, S, d) -> scalar mean CE via the fused kernel."""
+    B, S, d = hidden.shape
+    losses = fused_cross_entropy(
+        hidden.reshape(B * S, d), head, labels.reshape(B * S), interpret=interpret
+    )
+    return jnp.mean(losses)

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel for the Mamba selective-scan recurrence (Jamba's SSM).
+
+TPU adaptation (DESIGN.md): the CUDA selective-scan kernel is a warp-level
+parallel scan over shared memory. On TPU we instead tile the CHANNEL
+dimension across the grid (channels are embarrassingly parallel in Mamba-1:
+each d_inner channel owns an independent (d_state,) recurrence) and keep the
+(block_d, d_state) state resident in VMEM while a fori_loop walks the time
+axis in-register. Sequence chunking happens OUTSIDE the kernel (ops.py) so
+the (T, block_d) input tiles stay within VMEM.
+
+Inputs (per batch element, folded into grid dim 0):
+    dt (B, T, D), Bm (B, T, N), Cm (B, T, N), x (B, T, D), A (D, N)
+Output: y (B, T, D), final state (B, D, N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssm_kernel(dt_ref, b_ref, c_ref, x_ref, a_ref, h0_ref, y_ref, hout_ref, *,
+                T, block_d, n_state):
+    A = a_ref[...].astype(jnp.float32)               # (bd, N)
+    h0 = h0_ref[0].astype(jnp.float32)               # (bd, N)
+
+    def body(t, h):
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)   # (bd,)
+        x_t = x_ref[0, t, :].astype(jnp.float32)     # (bd,)
+        b_t = b_ref[0, t, :].astype(jnp.float32)     # (N,)
+        c_t = c_ref[0, t, :].astype(jnp.float32)     # (N,)
+        dA = jnp.exp(dt_t[:, None] * A)              # (bd, N)
+        h = dA * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_t = jnp.sum(h * c_t[None, :], axis=-1)     # (bd,)
+        y_ref[0, t, :] = y_t.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, T, body, h0)
+    hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def ssm_scan(
+    dt: jnp.ndarray,   # (B, T, D) softplus'd step sizes
+    Bm: jnp.ndarray,   # (B, T, N)
+    Cm: jnp.ndarray,   # (B, T, N)
+    x: jnp.ndarray,    # (B, T, D) conv'd activations
+    A: jnp.ndarray,    # (D, N) negative-definite diagonal
+    h0: jnp.ndarray,   # (B, D, N) initial state
+    *,
+    block_d: int = 256,
+    interpret: bool = False,
+):
+    B, T, D = dt.shape
+    N = Bm.shape[-1]
+    block_d = min(block_d, D)
+    assert D % block_d == 0, (D, block_d)
+    nd = D // block_d
+    kern = functools.partial(_ssm_kernel, T=T, block_d=block_d, n_state=N)
+    y, h_out = pl.pallas_call(
+        kern,
+        grid=(B, nd),
+        in_specs=[
+            pl.BlockSpec((1, T, block_d), lambda b, i: (b, 0, i)),
+            pl.BlockSpec((1, T, N), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, T, N), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, T, block_d), lambda b, i: (b, 0, i)),
+            pl.BlockSpec((block_d, N), lambda b, i: (i, 0)),
+            pl.BlockSpec((1, block_d, N), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, T, block_d), lambda b, i: (b, 0, i)),
+            pl.BlockSpec((1, block_d, N), lambda b, i: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, D), x.dtype),
+            jax.ShapeDtypeStruct((B, D, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(dt, Bm, Cm, x, A, h0)
+    return y, h_out

@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# (No `from __future__` here for that reason — py3.12 syntax is native.)
+DOC = """Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against the production mesh and record roofline inputs.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b \
+        --shape train_4k --mesh single --out results/dryrun
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Each run writes results/dryrun/<arch>__<shape>__<mesh>[__<algo>].json with
+compiled.memory_analysis(), compiled.cost_analysis(), parsed collective
+traffic, and the derived three-term roofline (TPU v5e constants).
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import mesh as mesh_mod
+from repro.launch.hlo_stats import collective_stats, loop_scaled_collective_stats
+from repro.launch.steps import SHAPES, build_plan
+from repro.sharding.rules import named
+
+
+def run_one(arch: str, shape: str, mesh_kind: str, algo: str, out_dir: Path,
+            local_steps: int = 8, overrides=None, scan_layers: bool = False,
+            tag: str = "") -> dict:
+    cfg = get_config(arch)
+    # Default: unroll layer stacks — XLA's cost analysis counts while bodies
+    # ONCE, so scanned layers would under-report FLOPs/bytes by ~n_layers.
+    # scan_layers=True is used for the multi-pod pass/fail sweep (the
+    # roofline table is single-pod only) to keep 80 compiles tractable.
+    cfg = dataclasses.replace(cfg, scan_layers=scan_layers)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh = mesh_mod.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    plan = build_plan(cfg, shape, mesh, algo=algo, local_steps=local_steps)
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(
+            plan.fn,
+            in_shardings=named(mesh, plan.in_shardings),
+            out_shardings=named(mesh, plan.out_shardings),
+            donate_argnums=plan.donate,
+        )
+        lowered = jitted.lower(*plan.args)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    simple = collective_stats(hlo)
+    scaled = loop_scaled_collective_stats(hlo)
+
+    flops = float(cost.get("flops", 0.0))          # per device
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    coll_bytes = scaled.total_bytes
+
+    compute_s = flops / mesh_mod.PEAK_FLOPS_BF16
+    memory_s = bytes_acc / mesh_mod.HBM_BW
+    collective_s = coll_bytes / mesh_mod.ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    n_params = cfg.n_params()
+    n_active = cfg.n_active_params()
+    info = SHAPES[shape]
+    tokens = info["global_batch"] * (info["seq_len"] if info["kind"] == "train" else 1)
+    if info["kind"] == "train":
+        model_flops = 6 * n_active * tokens
+    elif info["kind"] == "prefill":
+        tokens = info["global_batch"] * info["seq_len"]
+        model_flops = 2 * n_active * tokens
+    else:
+        model_flops = 2 * n_active * tokens
+    useful_ratio = model_flops / max(flops * n_chips, 1.0)
+
+    hbm = mesh_mod.HBM_PER_CHIP
+    per_device_bytes = mem.argument_size_in_bytes + mem.output_size_in_bytes \
+        - mem.alias_size_in_bytes + mem.temp_size_in_bytes
+    from repro.launch.roofline import analytic_activation_bytes
+
+    act_bytes = analytic_activation_bytes(cfg, shape, dict(mesh.shape))
+    at_rest = mem.argument_size_in_bytes + (
+        mem.output_size_in_bytes - mem.alias_size_in_bytes
+    )
+    fits_analytic = bool(at_rest + act_bytes <= hbm)
+
+    result = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_kind,
+        "algo": algo,
+        "chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "per_device_bytes": per_device_bytes,
+            "hbm_bytes": hbm,
+            # raw XLA:CPU buffer peak — loose upper bound (no TPU-style
+            # fusion/remat in CPU buffer assignment; see roofline.py)
+            "fits_hbm_xla_cpu": bool(per_device_bytes <= hbm),
+            "analytic_activation_bytes": act_bytes,
+            "at_rest_bytes": at_rest,
+            "fits_hbm_analytic": fits_analytic,
+            "fits_hbm": fits_analytic,
+        },
+        "cost": {"flops_per_device": flops, "bytes_accessed_per_device": bytes_acc},
+        "collectives": {"flat": simple.to_dict(), "loop_scaled": scaled.to_dict()},
+        "roofline": {
+            **terms,
+            "dominant": dominant,
+            "model_flops_global": model_flops,
+            "hlo_flops_global": flops * n_chips,
+            "useful_flops_ratio": useful_ratio,
+            "n_params": n_params,
+            "n_active_params": n_active,
+        },
+    }
+    if tag:
+        result["hillclimb"] = tag
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{algo}" if algo != "fedsgd" else ""
+    tag2 = ("__" + tag) if tag else overrides_tag(overrides)
+    path = out_dir / f"{arch}__{shape}__{mesh_kind}{suffix}{tag2}.json"
+    path.write_text(json.dumps(result, indent=2))
+    return result
+
+
+def overrides_tag(overrides) -> str:
+    if not overrides:
+        return ""
+    return "__" + "-".join(f"{k}={v}" for k, v in sorted(overrides.items()))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=sorted(ARCH_IDS))
+    ap.add_argument("--shape", default=None, choices=sorted(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--algo", default="fedsgd", choices=["fedsgd", "fedavg"])
+    ap.add_argument("--local-steps", type=int, default=8)
+    ap.add_argument("--all", action="store_true", help="all arch x shape pairs")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--scan", action="store_true",
+                    help="scan over layers (fast compile; pass/fail sweeps)")
+    ap.add_argument("--tag", default="", help="hillclimb tag for the output file")
+    ap.add_argument("--override", action="append", default=[],
+                    help="ModelConfig override key=value (hillclimbs)")
+    args = ap.parse_args()
+    out = Path(args.out)
+
+    archs = sorted(ARCH_IDS) if (args.all or not args.arch) else [args.arch]
+    shapes = sorted(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                suffix = f"__{args.algo}" if args.algo != "fedsgd" else ""
+                path = out / f"{arch}__{shape}__{mk}{suffix}.json"
+                if args.skip_existing and path.exists():
+                    print(f"[skip] {path.name}")
+                    continue
+                t0 = time.time()
+                try:
+                    overrides = {}
+                    for kv in args.override:
+                        k, v = kv.split("=", 1)
+                        overrides[k] = eval(v)  # trusted CLI input
+                    r = run_one(arch, shape, mk, args.algo, out,
+                                local_steps=args.local_steps,
+                                overrides=overrides or None,
+                                scan_layers=args.scan, tag=args.tag)
+                    ro = r["roofline"]
+                    print(
+                        f"[ok] {arch} {shape} {mk} {args.algo}: "
+                        f"compile {r['compile_s']}s  "
+                        f"compute {ro['compute_s']:.3e}s memory {ro['memory_s']:.3e}s "
+                        f"collective {ro['collective_s']:.3e}s -> {ro['dominant']}  "
+                        f"fits_hbm={r['memory']['fits_hbm']}",
+                        flush=True,
+                    )
+                except Exception as e:
+                    failures.append((arch, shape, mk, repr(e)))
+                    print(f"[FAIL] {arch} {shape} {mk}: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"{len(failures)} failures:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

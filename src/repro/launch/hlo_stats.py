@@ -1,0 +1,142 @@
+"""Parse collective traffic out of post-SPMD HLO text.
+
+After the SPMD partitioner runs, HLO array shapes are PER-PARTITION, so
+summing collective operand sizes gives per-device traffic. We apply the
+standard ring-algorithm byte multipliers:
+
+    all-reduce          2 * (g-1)/g * bytes   (reduce-scatter + all-gather)
+    all-gather          (g-1)/g * result_bytes
+    reduce-scatter      (g-1)/g * operand_bytes
+    all-to-all          (g-1)/g * bytes
+    collective-permute  1 * bytes
+
+where g is the replica-group size parsed from ``replica_groups=[n,g]<=[...]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].split("{")[-1]
+        return len([x for x in first.split(",") if x.strip()])
+    return 2  # conservative default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_type: Dict[str, float]
+    count_by_type: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_type.values())
+
+    def to_dict(self):
+        return {
+            "bytes_by_type": dict(self.bytes_by_type),
+            "count_by_type": dict(self.count_by_type),
+            "total_bytes": self.total_bytes,
+        }
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    bytes_by = defaultdict(float)
+    count_by = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str = m.group(1) or m.group(2)
+        op = m.group(3)
+        size = _shape_bytes(type_str)
+        g = _group_size(line)
+        ring = (g - 1) / g if g > 1 else 0.0
+        if op == "all-reduce":
+            size *= 2 * ring
+        elif op in ("all-gather", "reduce-scatter", "all-to-all"):
+            size *= ring
+        # collective-permute: 1x
+        bytes_by[op] += size
+        count_by[op] += 1
+    return CollectiveStats(dict(bytes_by), dict(count_by))
+
+
+# While-loop trip counts: collectives inside while bodies execute per
+# iteration. Post-optimization HLO on CPU keeps scans as while loops; we
+# approximate by multiplying body collectives by the trip count when it is
+# statically known from the HLO (constant-compare pattern). As a robust
+# fallback the caller can pass known trip counts per function name.
+_WHILE_TRIP_RE = re.compile(r"trip_count=(\d+)")
+
+
+def loop_scaled_collective_stats(hlo_text: str) -> CollectiveStats:
+    """Collective stats with while-body contributions scaled by trip count
+    where XLA annotated it (otherwise they count once — reported separately
+    by callers that know their loop structure)."""
+    # Split HLO into computations; find while ops referencing bodies.
+    comps: Dict[str, str] = {}
+    cur = None
+    lines_by_comp = defaultdict(list)
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*%?([\w\.\-]+)\s*\([^)]*\)\s*->", line)
+        if line.startswith(("HloModule",)):
+            continue
+        cm = re.match(r"\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(", line)
+        if cm and ("{" in line):
+            cur = cm.group(1)
+        if cur:
+            lines_by_comp[cur].append(line)
+    # Trip counts: map body name -> count
+    trips = {}
+    for line in hlo_text.splitlines():
+        if " while(" in line:
+            body = re.search(r"body=%?([\w\.\-]+)", line)
+            tc = _WHILE_TRIP_RE.search(line)
+            if body:
+                trips[body.group(1)] = int(tc.group(1)) if tc else 1
+    total = defaultdict(float)
+    counts = defaultdict(int)
+    for comp, lines in lines_by_comp.items():
+        stats = collective_stats("\n".join(lines))
+        mult = trips.get(comp, 1)
+        for k, v in stats.bytes_by_type.items():
+            total[k] += v * mult
+            counts[k] += stats.count_by_type[k] * mult
+    return CollectiveStats(dict(total), dict(counts))

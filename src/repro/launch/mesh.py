@@ -1,0 +1,52 @@
+"""Production meshes.
+
+Single pod: 256 chips (TPU v5e 16x16), axes (data, model).
+Multi-pod:  2 pods x 256 chips, axes (pod, data, model) — the "pod" axis is
+the slow inter-pod boundary that FedAvg's averaging schedule crosses once
+per round instead of once per step.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; the dry-run entrypoint sets XLA_FLAGS before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 (dryrun.py "
+            "sets this automatically)"
+        )
+    import numpy as np
+
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many (possibly forced) host devices exist —
+    used by sharding unit tests."""
+    import numpy as np
+
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+# Hardware constants for the roofline (TPU v5e).
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link
+HBM_PER_CHIP = 16 * 1024**3    # 16 GiB

@@ -1,0 +1,126 @@
+"""Roofline bookkeeping: analytic activation-memory model + table rendering.
+
+Why analytic: the dry-run compiles on the XLA *CPU* backend, whose buffer
+assignment neither fuses like XLA:TPU nor honors rematerialization barriers
+for liveness (verified empirically — jax.checkpoint leaves temp_size
+unchanged). XLA's ``argument/output`` byte counts are exact per-device
+numbers (validated against hand-computed shard sizes), so the HBM-fit
+estimate combines:
+
+    exact at-rest bytes (params + opt state + caches, from memory_analysis)
+  + analytic peak activation bytes (modeling remat: saved layer inputs +
+    one layer's backward working set + CE chunk + recurrent segment carries)
+
+The raw XLA temp_size is still recorded in every JSON as the compile
+artifact, with this caveat.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+from repro.launch.steps import SHAPES
+
+
+def _shard(n: int, size: int) -> float:
+    return n / size if n % size == 0 else n
+
+
+def analytic_activation_bytes(cfg: ModelConfig, shape_name: str, mesh_shape: Dict[str, int]) -> float:
+    """Coarse (±2x) per-device peak activation bytes for the given step."""
+    info = SHAPES[shape_name]
+    B, S, kind = info["global_batch"], info["seq_len"], info["kind"]
+    dp = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    tp = mesh_shape.get("model", 1)
+    Bl = max(B // dp, 1)
+    d = cfg.d_model
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    h_shard = tp if H % tp == 0 else 1
+    k_shard = tp if K % tp == 0 else 1
+    bpe = 2 if cfg.compute_dtype == "bfloat16" else 4
+
+    if kind == "decode":
+        # single token: negligible activations; a few token-sized buffers
+        return Bl * 1 * d * 4 * 8 + Bl * cfg.vocab_size / (tp if cfg.vocab_size % tp == 0 else 1) * 4
+
+    n_layers = cfg.n_layers + cfg.encoder_layers
+    saved_inputs = n_layers * Bl * S * d * bpe  # remat: layer inputs only
+
+    # one layer's backward working set (the recomputed layer)
+    attn_ws = Bl * S * hd * (2 * H / h_shard + 2 * K / k_shard) * 4  # qkvo f32
+    flash_stack = (S / cfg.attn_q_chunk) * S * Bl * (K / k_shard) * hd * 4  # dk parts
+    ff = max(cfg.d_ff, 1)
+    mlp_ws = 3 * Bl * S * (ff / (tp if ff % tp == 0 else 1)) * bpe
+    layer_ws = attn_ws + flash_stack + mlp_ws
+
+    # CE chunk logits (fwd+bwd)
+    ce_chunk = cfg.ce_chunk or S
+    v_shard = tp if cfg.vocab_size % tp == 0 else 1
+    ce_ws = 2 * Bl * ce_chunk * cfg.vocab_size / v_shard * 4
+
+    # recurrent segment carries (saved across the whole sequence per layer)
+    rec = 0.0
+    if cfg.ssm is not None and cfg.attn_period:
+        di = cfg.ssm.expand * d
+        di_l = di / (tp if di % tp == 0 else 1)
+        n_mamba = sum(
+            1 for i in range(cfg.n_layers)
+            if i % cfg.attn_period != cfg.attn_period // 2
+        )
+        rec += n_mamba * (S / 128) * Bl * di_l * cfg.ssm.d_state * 4
+    if cfg.xlstm_pattern:
+        n_m = sum(
+            1 for i in range(cfg.n_layers)
+            if cfg.xlstm_pattern[i % len(cfg.xlstm_pattern)] == "m"
+        )
+        hd_m = 2 * d // H
+        rec += n_m * max(S / 1024, 1) * Bl * H * hd_m * hd_m * 4
+        n_s = cfg.n_layers - n_m
+        rec += n_s * (S / 128) * Bl * d * 4 * 4
+
+    # MoE dispatch buffers (one layer's worth, fwd+bwd)
+    moe_ws = 0.0
+    if cfg.moe is not None:
+        mo = cfg.moe
+        tokens_l = Bl * S
+        e_shard = tp * dp if mo.n_experts % (tp * dp) == 0 else (
+            tp if mo.n_experts % tp == 0 else 1
+        )
+        cap_total = tokens_l * mo.topk * mo.capacity_factor
+        moe_ws = 2 * cap_total * (d + mo.d_ff / 1) * bpe / max(e_shard / tp, 1)
+
+    return saved_inputs + layer_ws + ce_ws + rec + moe_ws
+
+
+def load_results(out_dir: str = "results/dryrun"):
+    rows = []
+    for p in sorted(Path(out_dir).glob("*.json")):
+        rows.append(json.loads(p.read_text()))
+    return rows
+
+
+def render_table(rows, *, mesh="single", algo="fedsgd") -> str:
+    """Markdown roofline table for EXPERIMENTS.md."""
+    hdr = (
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL/HLO flops | at-rest GiB/dev | act est GiB/dev | fits 16G |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        if r["mesh"] != mesh or r.get("algo", "fedsgd") != algo or "hillclimb" in r:
+            continue
+        ro = r["roofline"]
+        mem = r["memory"]
+        at_rest = mem["argument_bytes"] / 2**30
+        act = mem.get("analytic_activation_bytes", 0) / 2**30
+        fits = mem.get("fits_hbm_analytic", mem.get("fits_hbm"))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.3e} | "
+            f"{ro['memory_s']:.3e} | {ro['collective_s']:.3e} | "
+            f"{ro['dominant'].replace('_s','')} | {ro['useful_flops_ratio']:.3f} | "
+            f"{at_rest:.2f} | {act:.2f} | {'Y' if fits else 'N'} |"
+        )
+    return hdr + "\n".join(lines) + "\n"

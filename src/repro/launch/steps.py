@@ -1,0 +1,262 @@
+"""Step builders + ShapeDtypeStruct input specs for every (arch x shape).
+
+The four assigned input shapes:
+
+    train_4k     seq 4096,    global_batch 256   -> train_step (FedSGD) or
+                                                    fedavg_round_step
+    prefill_32k  seq 32768,   global_batch 32    -> prefill_step
+    decode_32k   seq 32768,   global_batch 128   -> serve_step (1 new token,
+                                                    KV cache len 32768)
+    long_500k    seq 524288,  global_batch 1     -> serve_step; sub-quadratic
+                                                    policy per DESIGN.md
+
+``input_specs(cfg, shape)`` returns pure ShapeDtypeStruct stand-ins — weak-
+type-correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.local_sgd import (
+    LocalSGDConfig,
+    build_fedavg_round_step,
+    build_fedsgd_train_step,
+    replicate_for_groups,
+)
+from repro.models.transformer import TransformerLM
+from repro.optim.optimizers import adamw
+from repro.sharding.rules import (
+    add_leading_axis,
+    batch_pspecs,
+    cache_pspecs,
+    opt_state_pspecs,
+    param_pspecs,
+)
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+ENC_FRAMES = 4096  # encoder memory length for the audio arch (see DESIGN.md)
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def make_batch_specs(cfg: ModelConfig, B: int, S: int, kind: str) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one batch of the given step kind."""
+    cd = cfg.compute_dtype
+    batch: Dict[str, Any] = {}
+    if kind == "decode":
+        if cfg.modality == "vision":
+            batch["embeds"] = sds((B, 1, cfg.d_model), cd)
+            batch["positions"] = sds((B, 1, 3), jnp.int32)
+        else:
+            batch["tokens"] = sds((B, 1), jnp.int32)
+            batch["pos_offset"] = sds((), jnp.int32)
+        if cfg.modality == "audio":
+            pass  # decode skips the encoder; cross K/V live in the cache
+        return batch
+    # train / prefill
+    if cfg.modality == "vision":
+        batch["embeds"] = sds((B, S, cfg.d_model), cd)
+        batch["positions"] = sds((B, S, 3), jnp.int32)
+    else:
+        batch["tokens"] = sds((B, S), jnp.int32)
+    if cfg.modality == "audio":
+        batch["enc_embeds"] = sds((B, min(S, ENC_FRAMES), cfg.d_model), cd)
+    if kind == "train":
+        batch["labels"] = sds((B, S), jnp.int32)
+    return batch
+
+
+def decode_window(cfg: ModelConfig, shape_name: str) -> int:
+    """Sliding-window policy (DESIGN.md §long_500k): full-attention archs get
+    a rolling window at 500k; recurrent/hybrid archs run natively."""
+    if shape_name != "long_500k":
+        return cfg.sliding_window
+    if cfg.arch_type in ("ssm", "hybrid"):
+        return 0
+    return cfg.long_context_window
+
+
+@dataclasses.dataclass
+class LoweringPlan:
+    """Everything jax.jit needs: fn, arg shapes, in/out shardings."""
+
+    fn: Any
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    static: Dict[str, Any]
+    donate: Tuple[int, ...] = ()
+
+
+def build_plan(
+    cfg: ModelConfig,
+    shape_name: str,
+    mesh,
+    *,
+    algo: str = "fedsgd",
+    local_steps: int = 8,
+    lr: float = 3e-4,
+) -> LoweringPlan:
+    """Build the jit-able step + specs for (arch, shape, mesh).
+
+    algo: 'fedsgd' (baseline, per-step sync) or 'fedavg' (H local steps +
+    one pod-axis weighted parameter average; multi-pod mesh only).
+    """
+    info = SHAPES[shape_name]
+    B, S, kind = info["global_batch"], info["seq_len"], info["kind"]
+    multi_pod = "pod" in mesh.axis_names
+    model = TransformerLM(cfg)
+    params_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    # storage: TP + ZeRO-3 at rest; compute: TP only (see sharding.rules).
+    p_storage = param_pspecs(params_shapes, mesh, cfg=cfg, kind="storage")
+    p_compute = param_pspecs(params_shapes, mesh, cfg=cfg, kind="compute")
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+
+    def to_compute(params):
+        from jax.sharding import NamedSharding
+        return jax.lax.with_sharding_constraint(
+            params,
+            jax.tree.map(lambda sp: NamedSharding(mesh, sp), p_compute,
+                         is_leaf=lambda x: isinstance(x, P)),
+        )
+
+    def loss_zero3(params, batch):
+        # ZeRO-3 bridge: one weight all-gather per step on entry; the VJP of
+        # the constraint reduce-scatters gradients back to storage sharding.
+        return model.train_loss(to_compute(params), batch)
+
+    window = decode_window(cfg, shape_name)
+
+    if kind == "train":
+        opt = adamw(lr, state_dtype=jnp.dtype(cfg.optimizer_dtype))
+        batch_shapes = make_batch_specs(cfg, B, S, kind)
+        b_specs = batch_pspecs(batch_shapes, mesh, batch_axes=batch_axes)
+        if algo == "fedavg":
+            assert multi_pod, "fedavg round step shards clients over the pod axis"
+            G = mesh.shape["pod"]
+            ls_cfg = LocalSGDConfig(num_groups=G, local_steps=local_steps)
+            round_step = build_fedavg_round_step(loss_zero3, opt, ls_cfg)
+            params_g = jax.tree.map(
+                lambda l: sds((G,) + l.shape, l.dtype), params_shapes
+            )
+            opt_g = jax.eval_shape(jax.vmap(opt.init), params_g)
+            pg_specs = add_leading_axis(p_storage, "pod")
+            og_specs = add_leading_axis(opt_state_pspecs(
+                jax.eval_shape(opt.init, params_shapes), mesh, cfg=cfg), "pod")
+            # batches: (H, G, B_local, ...) — G over pod, B_local over data.
+            B_local = B // G
+            hb_shapes = jax.tree.map(
+                lambda l: sds((local_steps, G, B_local) + l.shape[1:], l.dtype),
+                batch_shapes,
+            )
+            hb_specs = jax.tree.map(
+                lambda l: P(None, "pod", "data", *([None] * (l.ndim - 3))),
+                hb_shapes,
+            )
+            weights = sds((G,), jnp.float32)
+
+            def fn(params_g, opt_g, batches, w):
+                pg, og, _, metrics = round_step(params_g, opt_g, None, batches, w)
+                return pg, og, metrics["loss"]
+
+            return LoweringPlan(
+                fn=fn,
+                args=(params_g, opt_g, hb_shapes, weights),
+                in_shardings=(pg_specs, og_specs, hb_specs, P()),
+                out_shardings=(pg_specs, og_specs, P()),
+                static={},
+                donate=(0, 1),
+            )
+        # FedSGD baseline
+        step = build_fedsgd_train_step(loss_zero3, opt)
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        o_specs = opt_state_pspecs(opt_shapes, mesh, cfg=cfg)
+
+        def fn(params, opt_state, batch):
+            params, opt_state, metrics = step(params, opt_state, batch)
+            return params, opt_state, metrics["loss"]
+
+        return LoweringPlan(
+            fn=fn,
+            args=(params_shapes, opt_shapes, batch_shapes),
+            in_shardings=(p_storage, o_specs, b_specs),
+            out_shardings=(p_storage, o_specs, P()),
+            static={},
+            donate=(0, 1),
+        )
+
+    if kind == "prefill":
+        batch_shapes = make_batch_specs(cfg, B, S, kind)
+        b_specs = batch_pspecs(batch_shapes, mesh, batch_axes=batch_axes)
+        cache_len = min(S, window) if window else S
+
+        def fn(params, batch):
+            caches, logits = model.prefill(params, batch, cache_len=cache_len, window=window)
+            return caches, logits
+
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_caches(
+                B, cache_len, window=window,
+                memory_len=min(S, ENC_FRAMES) if cfg.modality == "audio" else 0,
+            )
+        )
+        c_specs = cache_pspecs(cache_shapes, mesh)
+        logits_spec = _logits_spec(cfg, B, mesh, batch_axes)
+        return LoweringPlan(
+            fn=fn,
+            args=(params_shapes, batch_shapes),
+            in_shardings=(p_compute, b_specs),
+            out_shardings=(c_specs, logits_spec),
+            static={},
+        )
+
+    # decode
+    cache_len = min(S, window) if window else S
+    mem_len = ENC_FRAMES if cfg.modality == "audio" else 0
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_caches(B, cache_len, window=window, memory_len=mem_len)
+    )
+    # The cache arrives "full": idx = S (ShapeDtypeStruct carries no value —
+    # the shape is what matters for lowering).
+    c_specs = cache_pspecs(cache_shapes, mesh)
+    batch_shapes = make_batch_specs(cfg, B, S, "decode")
+    b_specs = batch_pspecs(batch_shapes, mesh, batch_axes=batch_axes)
+
+    def fn(params, batch, caches):
+        logits, new_caches = model.decode_step(params, batch, caches, window=window)
+        return logits, new_caches
+
+    logits_spec = _logits_spec(cfg, B, mesh, batch_axes)
+    return LoweringPlan(
+        fn=fn,
+        args=(params_shapes, batch_shapes, cache_shapes),
+        in_shardings=(p_compute, b_specs, c_specs),
+        out_shardings=(logits_spec, c_specs),
+        static={},
+        donate=(2,),
+    )
+
+def _logits_spec(cfg, B, mesh, batch_axes):
+    """Output logits (B, 1|S, V): batch over data axes (when divisible),
+    vocab over the tensor axis (when divisible)."""
+    bsz = 1
+    for a in batch_axes:
+        bsz *= mesh.shape[a]
+    b_axis = batch_axes if B % max(bsz, 1) == 0 else None
+    v_axis = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+    return P(b_axis, None, v_axis)

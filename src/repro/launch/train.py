@@ -1,0 +1,158 @@
+"""Production training driver: FedAvg/local-SGD rounds on a device mesh.
+
+End-to-end example (runs on this CPU container with 8 forced host devices,
+a ~20M-param dense LM, 2 client groups ("pods") x (data=2, model=2)):
+
+    PYTHONPATH=src python -m repro.launch.train --demo --rounds 30
+
+On a real multi-pod TPU deployment the same script runs without
+--force-host-devices and with --mesh production (make_production_mesh).
+The FedAvg round step = H local AdamW steps per client group + one weighted
+parameter average across the pod axis (see core/local_sgd.py).
+"""
+import argparse
+import os
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--demo", action="store_true",
+                    help="8 forced host devices, tiny model, synthetic data")
+    ap.add_argument("--force-host-devices", type=int, default=0)
+    ap.add_argument("--mesh", default="host", choices=["host", "production"])
+    ap.add_argument("--arch", default=None, help="assigned arch id (reduced for demo)")
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--algo", default="fedavg", choices=["fedavg", "fedsgd"])
+    ap.add_argument("--outer", default="none", choices=["none", "nesterov"],
+                    help="server optimizer on the pseudo-gradient (DiLoCo-style)")
+    ap.add_argument("--d-model", type=int, default=384)
+    ap.add_argument("--n-layers", type=int, default=6)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    n_force = args.force_host_devices or (8 if args.demo else 0)
+    if n_force:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n_force}"
+        )
+
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.checkpoint import save_checkpoint
+    from repro.configs import get_config
+    from repro.configs.base import ModelConfig, reduced
+    from repro.core.local_sgd import (
+        LocalSGDConfig,
+        build_fedavg_round_step,
+        build_fedsgd_train_step,
+        replicate_for_groups,
+        unreplicate,
+    )
+    from repro.data.synthetic import make_word_corpus
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.transformer import TransformerLM
+    from repro.optim import adamw, momentum
+    from repro.sharding.rules import batch_pspecs, named, param_pspecs, add_leading_axis
+
+    # --- mesh
+    if args.mesh == "production":
+        mesh = make_production_mesh(multi_pod=True)
+    else:
+        n = len(jax.devices())
+        assert n >= 8, "demo mesh needs >=8 devices (use --demo)"
+        mesh = jax.sharding.Mesh(
+            np.asarray(jax.devices()[:8]).reshape(2, 2, 2), ("pod", "data", "model")
+        )
+    G = mesh.shape["pod"]
+
+    # --- model
+    if args.arch:
+        cfg = reduced(get_config(args.arch), n_layers=args.n_layers)
+    else:
+        cfg = ModelConfig(
+            name="demo-lm", arch_type="dense", n_layers=args.n_layers,
+            d_model=args.d_model, n_heads=4, n_kv_heads=2, head_dim=64,
+            d_ff=4 * args.d_model, vocab_size=8192, scan_layers=True,
+        )
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    n_params = sum(int(x.size) for x in jax.tree.leaves(params))
+    print(f"mesh {dict(mesh.shape)}  model {cfg.name}: {n_params/1e6:.1f}M params")
+
+    # --- data: synthetic word corpus, one shard per client group
+    train, _, vocab = make_word_corpus(
+        n_authors=64, vocab_size=cfg.vocab_size, mean_words_per_author=20_000,
+        seed=args.seed,
+    )
+    corpus = np.concatenate(train)
+    H, S = args.local_steps, args.seq
+    B_local = max(args.global_batch // G, 1)
+    rng = np.random.default_rng(args.seed)
+
+    def sample_round_batch():
+        # (H, G, B_local, S) tokens + labels: each group reads its own shard
+        starts = rng.integers(0, len(corpus) - S - 1, (H, G, B_local))
+        tok = np.stack([[[corpus[s : s + S] for s in row] for row in step]
+                        for step in starts])
+        lab = np.stack([[[corpus[s + 1 : s + S + 1] for s in row] for row in step]
+                        for step in starts])
+        return {"tokens": jnp.asarray(tok), "labels": jnp.asarray(lab)}
+
+    # --- step
+    inner = adamw(args.lr)
+    outer = momentum(0.7, beta=0.9, nesterov=True) if args.outer == "nesterov" else None
+    if args.algo == "fedavg":
+        round_step = build_fedavg_round_step(
+            model.train_loss, inner, LocalSGDConfig(G, H), outer_opt=outer
+        )
+        params_g = replicate_for_groups(params, G)
+        opt_g = jax.vmap(inner.init)(params_g)
+        outer_state = outer.init(params) if outer else None
+        p_specs = add_leading_axis(
+            param_pspecs(jax.eval_shape(lambda: params), mesh, cfg=cfg, kind="compute"),
+            "pod",
+        )
+        step = jax.jit(round_step)
+        with mesh:
+            for r in range(args.rounds):
+                batch = sample_round_batch()
+                params_g, opt_g, outer_state, metrics = step(
+                    params_g, opt_g, outer_state, batch, jnp.ones(G)
+                )
+                print(f"round {r+1:3d}  loss {float(metrics['loss']):.4f}", flush=True)
+        final = unreplicate(params_g)
+    else:
+        step_fn = build_fedsgd_train_step(model.train_loss, inner)
+        opt_state = inner.init(params)
+        step = jax.jit(step_fn, donate_argnums=(0, 1))
+        with mesh:
+            for r in range(args.rounds * H):
+                b = sample_round_batch()
+                batch = {
+                    "tokens": b["tokens"][0].reshape(-1, S),
+                    "labels": b["labels"][0].reshape(-1, S),
+                }
+                params, opt_state, metrics = step(params, opt_state, batch)
+                if (r + 1) % H == 0:
+                    print(f"step {r+1:4d}  loss {float(metrics['loss']):.4f}", flush=True)
+        final = params
+
+    if args.checkpoint_dir:
+        save_checkpoint(args.checkpoint_dir, final, step=args.rounds,
+                        metadata={"algo": args.algo, "arch": cfg.name})
+        print("checkpoint ->", args.checkpoint_dir)
+
+
+if __name__ == "__main__":
+    main()

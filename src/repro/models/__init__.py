@@ -1,0 +1,8 @@
+from repro.models.paper import (
+    Model,
+    mnist_2nn,
+    mnist_cnn,
+    cifar_cnn,
+    char_lstm,
+    word_lstm,
+)

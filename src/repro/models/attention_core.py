@@ -1,0 +1,265 @@
+"""Attention inner loops: blocked (flash-style) causal attention in pure JAX.
+
+``blocked_attention`` is the memory-safe attention used for training and
+prefill on long sequences: a double ``lax.scan`` over query and key/value
+tiles with online-softmax statistics, never materializing the (Sq, Sk) score
+matrix. It is also the reference algorithm for the Pallas
+``kernels/flash_attention.py`` TPU kernel (same tiling, same math).
+
+Supports GQA/MQA (n_kv_heads <= n_heads), causal and bidirectional masking,
+and sliding-window masking (rolling local attention for the long_500k shape).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _pad_to(x, axis, multiple):
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def blocked_attention(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Sk, K, D)
+    v: jnp.ndarray,  # (B, Sk, K, D)
+    *,
+    causal: bool = True,
+    window: int = 0,            # 0 = unlimited; else only last `window` keys
+    q_offset: int = 0,          # absolute position of q[0] (for caches)
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Online-softmax tiled attention with a flash-style recompute backward
+    (only (q, k, v, out, lse) are saved as residuals — the (Sq, Sk) score
+    tiles are rebuilt in the VJP, never stored). Returns (B, Sq, H, D)."""
+    return _blocked_attention_vjp(q, k, v, causal, window, q_offset, q_chunk, k_chunk)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _blocked_attention_vjp(q, k, v, causal, window, q_offset, q_chunk, k_chunk):
+    out, _ = _blocked_attention_fwd_impl(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        q_chunk=q_chunk, k_chunk=k_chunk,
+    )
+    return out
+
+
+def _blocked_attention_fwd(q, k, v, causal, window, q_offset, q_chunk, k_chunk):
+    out, lse = _blocked_attention_fwd_impl(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        q_chunk=q_chunk, k_chunk=k_chunk,
+    )
+    return out, (q, k, v, out, lse)
+
+
+def _blocked_attention_bwd(causal, window, q_offset, q_chunk, k_chunk, res, g):
+    q, k, v, out, lse = res
+    dq, dk, dv = _flash_bwd(
+        q, k, v, out, lse, g, causal=causal, window=window, q_offset=q_offset,
+        q_chunk=q_chunk, k_chunk=k_chunk,
+    )
+    return dq, dk, dv
+
+
+def _mask_for(qpos, kpos, causal, window, Sk0):
+    mask = (kpos < Sk0)[None, :]
+    if causal:
+        mask = mask & (qpos[:, None] >= kpos[None, :])
+    if window:
+        mask = mask & ((qpos[:, None] - kpos[None, :]) < window)
+    return mask
+
+
+def _blocked_attention_fwd_impl(
+    q, k, v, *, causal, window, q_offset, q_chunk, k_chunk
+):
+    """Forward pass; also returns per-query logsumexp for the VJP."""
+    B, Sq, H, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    assert H % K == 0, (H, K)
+    G = H // K
+    scale = 1.0 / (D**0.5)
+    out_dtype = q.dtype
+
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    qp, Sq0 = _pad_to(q, 1, q_chunk)
+    kp, Sk0 = _pad_to(k, 1, k_chunk)
+    vp, _ = _pad_to(v, 1, k_chunk)
+
+    nq = qp.shape[1] // q_chunk
+    nk = kp.shape[1] // k_chunk
+
+    # (nq, B, qc, K, G, D) / (nk, B, kc, K, D)
+    qt = qp.reshape(B, nq, q_chunk, K, G, D).transpose(1, 0, 2, 3, 4, 5)
+    kt = kp.reshape(B, nk, k_chunk, K, D).transpose(1, 0, 2, 3, 4)
+    vt = vp.reshape(B, nk, k_chunk, K, D).transpose(1, 0, 2, 3, 4)
+
+    q_pos_base = jnp.arange(q_chunk)
+    k_pos_base = jnp.arange(k_chunk)
+
+    def q_block(q_i, i):
+        q_i = q_i.astype(jnp.float32) * scale
+        qpos = q_offset + i * q_chunk + q_pos_base  # (qc,)
+
+        def kv_block(carry, inp):
+            m, l, acc = carry
+            k_j, v_j, j = inp
+            kpos = j * k_chunk + k_pos_base  # (kc,)
+            s = jnp.einsum(
+                "bqkgd,bskd->bkgqs", q_i, k_j.astype(jnp.float32)
+            )  # (B,K,G,qc,kc)
+            mask = _mask_for(qpos, kpos, causal, window, Sk0)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bqkgd", p, v_j.astype(jnp.float32))
+            acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, q_chunk, K, G, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0), (kt, vt, jnp.arange(nk))
+        )
+        l = jnp.maximum(l, 1e-30)
+        out = acc / l.transpose(0, 3, 1, 2)[..., None]
+        lse = m + jnp.log(l)  # (B,K,G,qc)
+        return out.astype(out_dtype), lse
+
+    outs, lses = jax.lax.map(lambda inp: q_block(inp[0], inp[1]), (qt, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * q_chunk, H, D)
+    # lse: (nq,B,K,G,qc) -> (B, Sq, H)
+    lse = lses.transpose(1, 0, 4, 2, 3).reshape(B, nq * q_chunk, H)
+    return out[:, :Sq0], lse[:, :Sq0]
+
+
+def _flash_bwd(q, k, v, out, lse, g, *, causal, window, q_offset, q_chunk, k_chunk):
+    """Flash-attention backward: rebuild P tiles from (q, k, lse); residual
+    memory is O(Sq + Sk), not O(Sq * Sk)."""
+    B, Sq, H, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / (D**0.5)
+
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    qp, Sq0 = _pad_to(q, 1, q_chunk)
+    kp, Sk0 = _pad_to(k, 1, k_chunk)
+    vp, _ = _pad_to(v, 1, k_chunk)
+    op, _ = _pad_to(out, 1, q_chunk)
+    gp, _ = _pad_to(g, 1, q_chunk)
+    lp, _ = _pad_to(lse, 1, q_chunk)
+
+    nq = qp.shape[1] // q_chunk
+    nk = kp.shape[1] // k_chunk
+
+    qt = qp.reshape(B, nq, q_chunk, K, G, D).transpose(1, 0, 2, 3, 4, 5)
+    ot = op.reshape(B, nq, q_chunk, K, G, D).transpose(1, 0, 2, 3, 4, 5)
+    gt = gp.reshape(B, nq, q_chunk, K, G, D).transpose(1, 0, 2, 3, 4, 5)
+    lt = lp.reshape(B, nq, q_chunk, K, G).transpose(1, 0, 2, 3, 4)
+    kt = kp.reshape(B, nk, k_chunk, K, D).transpose(1, 0, 2, 3, 4)
+    vt = vp.reshape(B, nk, k_chunk, K, D).transpose(1, 0, 2, 3, 4)
+
+    q_pos_base = jnp.arange(q_chunk)
+    k_pos_base = jnp.arange(k_chunk)
+
+    # delta_i = rowsum(dO * O) per query (B,K,G,qc)
+    delta = jnp.einsum("nbqkgd,nbqkgd->nbkgq", gt.astype(jnp.float32), ot.astype(jnp.float32))
+
+    def q_block(inp):
+        q_i, g_i, l_i, d_i, i = inp
+        q_i = q_i.astype(jnp.float32)
+        g_i = g_i.astype(jnp.float32)
+        l_i = l_i.transpose(0, 2, 3, 1)  # (B,K,G,qc)
+        qpos = q_offset + i * q_chunk + q_pos_base
+
+        def kv_block(dq_acc, inp2):
+            k_j, v_j, j = inp2
+            kpos = j * k_chunk + k_pos_base
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_i * scale, k_j.astype(jnp.float32))
+            mask = _mask_for(qpos, kpos, causal, window, Sk0)
+            s = jnp.where(mask, s, NEG_INF)
+            p = jnp.exp(s - l_i[..., None])  # (B,K,G,qc,kc)
+            dv_j = jnp.einsum("bkgqs,bqkgd->bskd", p, g_i)
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", g_i, v_j.astype(jnp.float32))
+            ds = p * (dp - d_i[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum("bkgqs,bskd->bqkgd", ds, k_j.astype(jnp.float32))
+            dk_j = jnp.einsum("bkgqs,bqkgd->bskd", ds, q_i)
+            return dq_acc, (dk_j, dv_j)
+
+        dq0 = jnp.zeros((B, q_chunk, K, G, D), jnp.float32)
+        dq_i, (dk_parts, dv_parts) = jax.lax.scan(
+            kv_block, dq0, (kt, vt, jnp.arange(nk))
+        )
+        return dq_i, dk_parts, dv_parts
+
+    dqs, dks, dvs = jax.lax.map(
+        q_block, (qt, gt, lt, delta, jnp.arange(nq))
+    )
+    # dqs: (nq, B, qc, K, G, D); dks/dvs: (nq, nk, B, kc, K, D)
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * q_chunk, H, D)[:, :Sq0]
+    dk = jnp.sum(dks, axis=0).transpose(1, 0, 2, 3, 4).reshape(B, nk * k_chunk, K, D)[:, :Sk0]
+    dv = jnp.sum(dvs, axis=0).transpose(1, 0, 2, 3, 4).reshape(B, nk * k_chunk, K, D)[:, :Sk0]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_blocked_attention_vjp.defvjp(_blocked_attention_fwd, _blocked_attention_bwd)
+
+
+def naive_attention(
+    q, k, v, *, causal=True, window: int = 0, q_offset: int = 0
+) -> jnp.ndarray:
+    """Reference O(Sq*Sk) attention — oracle for tests/kernels."""
+    B, Sq, H, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32).reshape(B, Sq, K, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32)) / (D**0.5)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,       # (B, 1, H, D)
+    k_cache: jnp.ndarray, # (B, S, K, D)
+    v_cache: jnp.ndarray, # (B, S, K, D)
+    valid_len,            # scalar or (B,): number of valid cache entries
+) -> jnp.ndarray:
+    """Single-token attention against a (possibly rolling) KV cache. With a
+    rolling cache all S slots are valid once full; masking handles warm-up."""
+    B, _, H, D = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32).reshape(B, K, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache.astype(jnp.float32)) / (D**0.5)
+    pos = jnp.arange(S)
+    valid = pos[None, :] < jnp.reshape(jnp.asarray(valid_len), (-1, 1))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)

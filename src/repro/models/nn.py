@@ -1,0 +1,104 @@
+"""Low-level pure-JAX NN primitives (no flax): dense, conv, pooling, LSTM.
+
+Every module is an (init, apply) pair over plain dict pytrees. Initializers
+follow standard fan-in scaling (Glorot for dense/conv, orthogonal-ish uniform
+for LSTM) matching the era of the paper's models.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def glorot(rng, shape, dtype=jnp.float32):
+    fan_in = int(np.prod(shape[:-1]))
+    fan_out = int(shape[-1])
+    limit = float(np.sqrt(6.0 / (fan_in + fan_out)))
+    return jax.random.uniform(rng, shape, dtype, -limit, limit)
+
+
+def normal_init(rng, shape, stddev, dtype=jnp.float32):
+    return stddev * jax.random.normal(rng, shape, dtype)
+
+
+def dense_init(rng, d_in, d_out, bias=True, dtype=jnp.float32):
+    kr, _ = jax.random.split(rng)
+    p = {"w": glorot(kr, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    return y + p["b"] if "b" in p else y
+
+
+def conv2d_init(rng, kh, kw, c_in, c_out, dtype=jnp.float32):
+    return {
+        "w": glorot(rng, (kh, kw, c_in, c_out), dtype),
+        "b": jnp.zeros((c_out,), dtype),
+    }
+
+
+def conv2d(p, x, stride=1, padding="SAME"):
+    """x: (B, H, W, C). Kernel layout HWIO."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        p["w"],
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def max_pool(x, window=2, stride=2):
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+
+
+# ---------------------------------------------------------------------------
+# LSTM (standard, no peepholes) — used by the paper's char/word models.
+# ---------------------------------------------------------------------------
+
+
+def lstm_init(rng, d_in, d_hidden, dtype=jnp.float32):
+    k = jax.random.split(rng, 2)
+    return {
+        "wx": glorot(k[0], (d_in, 4 * d_hidden), dtype),
+        "wh": glorot(k[1], (d_hidden, 4 * d_hidden), dtype),
+        "b": jnp.zeros((4 * d_hidden,), dtype),
+    }
+
+
+def lstm_cell(p, carry, x_t):
+    h, c = carry
+    gates = x_t @ p["wx"] + h @ p["wh"] + p["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return (h, c), h
+
+
+def lstm_apply(p, x):
+    """x: (B, T, d_in) -> (B, T, d_hidden); scan over time."""
+    B = x.shape[0]
+    d_hidden = p["wh"].shape[0]
+    carry = (
+        jnp.zeros((B, d_hidden), x.dtype),
+        jnp.zeros((B, d_hidden), x.dtype),
+    )
+    carry, hs = jax.lax.scan(
+        lambda cr, xt: lstm_cell(p, cr, xt), carry, jnp.swapaxes(x, 0, 1)
+    )
+    return jnp.swapaxes(hs, 0, 1)

@@ -1,0 +1,137 @@
+"""The five model families evaluated in the paper (Section 3).
+
+1. MNIST 2NN — MLP, 2 hidden layers x 200 ReLU units; 199,210 params.
+2. MNIST CNN — 2 conv (32, 64 ch, 5x5, SAME, 2x2 maxpool), FC 512, softmax;
+   1,663,370 params (matches the paper exactly).
+3. CIFAR CNN — the TF-tutorial architecture (~1.07e6 params, paper: "about
+   1e6"): conv64-pool-conv64-pool-FC384-FC192-linear10 on 24x24x3 crops.
+4. Char-LSTM — embed 8, 2x LSTM 256, softmax over chars (Shakespeare).
+5. Word-LSTM — embed 192, LSTM 256, projection, 10k-word softmax.
+
+Each constructor returns a ``Model(init, apply, loss)`` namespace.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import classification_loss, lm_loss
+from repro.models import nn
+
+
+class Model(NamedTuple):
+    init: Callable
+    apply: Callable
+    loss: Callable
+
+
+def mnist_2nn(n_classes: int = 10, d_in: int = 784) -> Model:
+    def init(rng):
+        k = jax.random.split(rng, 3)
+        return {
+            "fc1": nn.dense_init(k[0], d_in, 200),
+            "fc2": nn.dense_init(k[1], 200, 200),
+            "out": nn.dense_init(k[2], 200, n_classes),
+        }
+
+    def apply(p, x):
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(nn.dense(p["fc1"], x))
+        x = jax.nn.relu(nn.dense(p["fc2"], x))
+        return nn.dense(p["out"], x)
+
+    return Model(init, apply, classification_loss(apply))
+
+
+def mnist_cnn(n_classes: int = 10) -> Model:
+    def init(rng):
+        k = jax.random.split(rng, 4)
+        return {
+            "conv1": nn.conv2d_init(k[0], 5, 5, 1, 32),
+            "conv2": nn.conv2d_init(k[1], 5, 5, 32, 64),
+            "fc": nn.dense_init(k[2], 7 * 7 * 64, 512),
+            "out": nn.dense_init(k[3], 512, n_classes),
+        }
+
+    def apply(p, x):
+        if x.ndim == 2:
+            x = x.reshape(-1, 28, 28, 1)
+        x = nn.max_pool(jax.nn.relu(nn.conv2d(p["conv1"], x)))
+        x = nn.max_pool(jax.nn.relu(nn.conv2d(p["conv2"], x)))
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(nn.dense(p["fc"], x))
+        return nn.dense(p["out"], x)
+
+    return Model(init, apply, classification_loss(apply))
+
+
+def cifar_cnn(n_classes: int = 10) -> Model:
+    """TF deep_cnn tutorial model on 24x24x3 (the paper's preprocessing)."""
+
+    def init(rng):
+        k = jax.random.split(rng, 5)
+        return {
+            "conv1": nn.conv2d_init(k[0], 5, 5, 3, 64),
+            "conv2": nn.conv2d_init(k[1], 5, 5, 64, 64),
+            "fc1": nn.dense_init(k[2], 6 * 6 * 64, 384),
+            "fc2": nn.dense_init(k[3], 384, 192),
+            "out": nn.dense_init(k[4], 192, n_classes),
+        }
+
+    def apply(p, x):
+        x = nn.max_pool(jax.nn.relu(nn.conv2d(p["conv1"], x)))
+        x = nn.max_pool(jax.nn.relu(nn.conv2d(p["conv2"], x)))
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(nn.dense(p["fc1"], x))
+        x = jax.nn.relu(nn.dense(p["fc2"], x))
+        return nn.dense(p["out"], x)
+
+    return Model(init, apply, classification_loss(apply))
+
+
+def char_lstm(vocab_size: int, embed_dim: int = 8, hidden: int = 256) -> Model:
+    """Stacked 2-layer character LSTM (paper: 866,578 params at their vocab;
+    the count scales with vocab as 796,672 + 265*V for embed 8/hidden 256)."""
+
+    def init(rng):
+        k = jax.random.split(rng, 4)
+        return {
+            "embed": nn.normal_init(k[0], (vocab_size, embed_dim), 0.1),
+            "lstm1": nn.lstm_init(k[1], embed_dim, hidden),
+            "lstm2": nn.lstm_init(k[2], hidden, hidden),
+            "out": nn.dense_init(k[3], hidden, vocab_size),
+        }
+
+    def apply(p, tokens):
+        x = p["embed"][tokens]
+        x = nn.lstm_apply(p["lstm1"], x)
+        x = nn.lstm_apply(p["lstm2"], x)
+        return nn.dense(p["out"], x)
+
+    return Model(init, apply, lm_loss(apply))
+
+
+def word_lstm(vocab_size: int = 10_000, embed_dim: int = 192, hidden: int = 256) -> Model:
+    """Large-scale next-word model: separate in/out embeddings of dim 192
+    co-trained with a 256-unit LSTM (paper Section 3, 4,950,544 params at
+    their exact layout)."""
+
+    def init(rng):
+        k = jax.random.split(rng, 4)
+        return {
+            "embed_in": nn.normal_init(k[0], (vocab_size, embed_dim), 0.05),
+            "lstm": nn.lstm_init(k[1], embed_dim, hidden),
+            "proj": nn.dense_init(k[2], hidden, embed_dim),
+            "embed_out": nn.normal_init(k[3], (vocab_size, embed_dim), 0.05),
+            "out_b": jnp.zeros((vocab_size,), jnp.float32),
+        }
+
+    def apply(p, tokens):
+        x = p["embed_in"][tokens]
+        x = nn.lstm_apply(p["lstm"], x)
+        x = nn.dense(p["proj"], x)
+        return x @ p["embed_out"].T + p["out_b"]
+
+    return Model(init, apply, lm_loss(apply))

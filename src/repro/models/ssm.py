@@ -1,0 +1,160 @@
+"""Mamba-1 selective state-space block (for Jamba's SSM layers).
+
+Faithful to arXiv:2312.00752 as instantiated by Jamba (arXiv:2403.19887):
+in-proj to 2*d_inner (x, z gate), causal depthwise conv (d_conv=4), SiLU,
+input-dependent (Δ, B, C) projections, diagonal A with ZOH discretization,
+selective scan, gated output, out-proj. Jamba adds RMSNorm on Δ/B/C inputs'
+predecessor — we apply RMSNorm to the scan output as in the Jamba reference.
+
+The sequential scan here is the semantic reference; the TPU hot path is the
+chunked Pallas kernel in ``repro/kernels/ssm_scan.py`` (same recurrence).
+
+State for decode: conv tail (B, d_conv-1, d_inner) + SSM state (B, d_inner, N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+from repro.models.layers import rmsnorm, rmsnorm_init
+
+
+def _segmented_scan(step, carry0, xs, segment: int):
+    """lax.scan with gradient checkpointing every ``segment`` steps: the
+    backward pass stores only per-segment carries (O(S/segment) states) and
+    recomputes inside each segment — the standard BPTT memory/compute
+    trade-off for long recurrences (compile-time choice, exact math)."""
+    S = jax.tree.leaves(xs)[0].shape[0]
+    if S <= segment:
+        return jax.lax.scan(step, carry0, xs)
+    n_seg = S // segment
+    tail = S - n_seg * segment
+    head = jax.tree.map(lambda a: a[: n_seg * segment].reshape(
+        (n_seg, segment) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def seg_body(carry, seg_xs):
+        return jax.lax.scan(step, carry, seg_xs)
+
+    carry, ys = jax.lax.scan(seg_body, carry0, head)
+    ys = jax.tree.map(lambda a: a.reshape((n_seg * segment,) + a.shape[2:]), ys)
+    if tail:
+        carry, ys_t = jax.lax.scan(
+            step, carry, jax.tree.map(lambda a: a[n_seg * segment :], xs)
+        )
+        ys = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0), ys, ys_t)
+    return carry, ys
+
+
+def mamba_init(rng, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    dt_rank = s.resolved_dt_rank(d)
+    ks = jax.random.split(rng, 6)
+    # dt bias initialized so softplus(dt_bias) ~ U[1e-3, 1e-1] (mamba ref).
+    u = jax.random.uniform(ks[4], (di,), jnp.float32)
+    dt_init = np.log(np.e - 1) + u * 0  # placeholder; refined below
+    dt = jnp.exp(u * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": nn.glorot(ks[0], (d, 2 * di), dtype),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (s.d_conv, di), dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": nn.glorot(ks[2], (di, dt_rank + 2 * s.d_state), dtype),
+        "dt_proj": nn.glorot(ks[3], (dt_rank, di), dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, s.d_state + 1, dtype=jnp.float32), (di, s.d_state))
+        ),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_norm": rmsnorm_init(di, dtype),
+        "out_proj": nn.glorot(ks[5], (di, d), dtype),
+    }
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, s.d_state), jnp.float32),
+    }
+
+
+def _ssm_inputs(p, cfg, xz):
+    """Shared front half: conv + SiLU + (dt, B, C)."""
+    s = cfg.ssm
+    di = p["dt_proj"].shape[1]
+    dt_rank = p["dt_proj"].shape[0]
+    x, z = jnp.split(xz, 2, axis=-1)
+    return x, z, di, dt_rank
+
+
+def mamba_apply(p, cfg: ModelConfig, u, *, cache=None, mode="train"):
+    """u: (B, S, d). Returns (y, new_cache)."""
+    s = cfg.ssm
+    B, S, d = u.shape
+    xz = u @ p["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)  # (B,S,di)
+    di = x.shape[-1]
+
+    # Causal depthwise conv along S with state carry for decode.
+    if mode == "decode":
+        assert cache is not None and S == 1
+        ctx = jnp.concatenate([cache["conv"], x], axis=1)  # (B, d_conv, di)
+        new_conv = ctx[:, 1:]
+    else:
+        pad = jnp.zeros((B, s.d_conv - 1, di), x.dtype)
+        ctx = jnp.concatenate([pad, x], axis=1)
+        new_conv = ctx[:, -(s.d_conv - 1) :] if mode == "prefill" else None
+    # windows: out[t] = sum_j conv_w[j] * ctx[t+j]
+    xc = sum(
+        ctx[:, j : j + S] * p["conv_w"][j][None, None, :] for j in range(s.d_conv)
+    ) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    dbc = xc @ p["x_proj"]  # (B,S,dt_rank+2N)
+    dt_rank = p["dt_proj"].shape[0]
+    dt = jax.nn.softplus(
+        (dbc[..., :dt_rank] @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"]
+    )  # (B,S,di)
+    Bmat = dbc[..., dt_rank : dt_rank + s.d_state].astype(jnp.float32)  # (B,S,N)
+    Cmat = dbc[..., dt_rank + s.d_state :].astype(jnp.float32)          # (B,S,N)
+    A = -jnp.exp(p["A_log"])  # (di,N)
+
+    xf = xc.astype(jnp.float32)
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp  # (B,di),(B,N),(B,N),(B,di)
+        dA = jnp.exp(dt_t[..., None] * A[None])            # (B,di,N)
+        dBx = (dt_t * x_t)[..., None] * b_t[:, None, :]    # (B,di,N)
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h0 = cache["ssm"] if (cache is not None and mode == "decode") else jnp.zeros(
+        (B, di, s.d_state), jnp.float32
+    )
+    inp = (
+        jnp.swapaxes(dt, 0, 1),
+        jnp.swapaxes(Bmat, 0, 1),
+        jnp.swapaxes(Cmat, 0, 1),
+        jnp.swapaxes(xf, 0, 1),
+    )
+    h_last, ys = _segmented_scan(step, h0, inp, segment=128)
+    y = jnp.swapaxes(ys, 0, 1) + xf * p["D"]  # (B,S,di)
+    y = y.astype(u.dtype) * jax.nn.silu(z)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps)
+    out = y @ p["out_proj"]
+
+    if mode == "train":
+        new_cache = None
+    elif mode == "prefill":
+        new_cache = {"conv": new_conv, "ssm": h_last}
+    else:
+        new_cache = {"conv": new_conv, "ssm": h_last}
+    return out, new_cache

@@ -1,0 +1,261 @@
+"""xLSTM blocks — sLSTM (scalar memory, exponential gating, block-diagonal
+recurrence) and mLSTM (matrix memory, parallelizable) per arXiv:2405.04517.
+
+Both use the paper's stabilizer state m_t to keep exponential gates bounded:
+
+    m_t = max(log f_t + m_{t-1}, log i_t)
+    i'  = exp(log i_t - m_t),   f' = exp(log f_t + m_{t-1} - m_t)
+
+mLSTM block: pre-LN -> up-proj (factor 2) -> [q,k,v from one branch] ->
+matrix-memory recurrence -> gated by the other branch -> down-proj.
+sLSTM block: pre-LN -> sLSTM with head-block-diagonal recurrence -> gated
+FFN (factor 4/3), following the paper's post-up-projection block.
+
+Decode caches: mLSTM (C: B,H,D,D; n: B,H,D; m: B,H), sLSTM (c,n,h: B,H,D;
+m: B,H,D) — O(1) per token, so long_500k runs natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+from repro.models.layers import rmsnorm, rmsnorm_init
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(rng, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    di = 2 * d  # up-projection factor 2 (paper)
+    hd = di // H
+    ks = jax.random.split(rng, 7)
+    return {
+        "up": nn.glorot(ks[0], (d, 2 * di), dtype),   # -> (x_branch, z_gate)
+        "mq": nn.glorot(ks[1], (di, di), dtype),
+        "mk": nn.glorot(ks[2], (di, di), dtype),
+        "mv": nn.glorot(ks[3], (di, di), dtype),
+        "wi": nn.glorot(ks[4], (di, H), jnp.float32),  # input gate (per head)
+        "wf": nn.glorot(ks[5], (di, H), jnp.float32),  # forget gate (per head)
+        "bi": jnp.zeros((H,), jnp.float32),
+        "bf": 3.0 * jnp.ones((H,), jnp.float32),       # forget-bias init high
+        "out_norm": rmsnorm_init(di, dtype),
+        "down": nn.glorot(ks[6], (di, d), dtype),
+    }
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype):
+    H = cfg.n_heads
+    hd = 2 * cfg.d_model // H
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_apply(p, cfg: ModelConfig, x, *, cache=None, mode="train", chunk=1024):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    up = x @ p["up"]
+    xb, z = jnp.split(up, 2, axis=-1)  # (B,S,di)
+    di = xb.shape[-1]
+    hd = di // H
+
+    q = (xb @ p["mq"]).reshape(B, S, H, hd).astype(jnp.float32)
+    k = (xb @ p["mk"]).reshape(B, S, H, hd).astype(jnp.float32) / (hd**0.5)
+    v = (xb @ p["mv"]).reshape(B, S, H, hd).astype(jnp.float32)
+    ig = (xb.astype(jnp.float32) @ p["wi"] + p["bi"])  # (B,S,H) log-input-gate
+    fg = jax.nn.log_sigmoid(xb.astype(jnp.float32) @ p["wf"] + p["bf"])  # log f
+
+    if cache is not None and mode == "decode":
+        carry0 = (cache["C"], cache["n"], cache["m"])
+    else:
+        carry0 = (
+            jnp.zeros((B, H, hd, hd), jnp.float32),
+            jnp.zeros((B, H, hd), jnp.float32),
+            jnp.full((B, H), -1e30, jnp.float32),
+        )
+
+    if S == 1:
+        carry, y = _mlstm_step(carry0, (q[:, 0], k[:, 0], v[:, 0], ig[:, 0], fg[:, 0]))
+        ys = y[:, None]
+    else:
+        carry, ys = _mlstm_chunkwise(carry0, q, k, v, ig, fg, chunk=min(chunk, S))
+    y = ys.reshape(B, S, di).astype(x.dtype)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ p["down"]
+    new_cache = (
+        {"C": carry[0], "n": carry[1], "m": carry[2]} if mode != "train" else None
+    )
+    return out, new_cache
+
+
+def _mlstm_step(carry, inp):
+    """One step of the exact sequential recurrence (decode path; also the
+    oracle for the chunkwise form)."""
+    C, n, m = carry
+    q_t, k_t, v_t, i_t, f_t = inp
+    m_new = jnp.maximum(f_t + m, i_t)                # (B,H)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_t + m - m_new)
+    C = f_p[..., None, None] * C + i_p[..., None, None] * (
+        v_t[..., :, None] * k_t[..., None, :]
+    )  # (B,H,hd,hd)
+    n = f_p[..., None] * n + i_p[..., None] * k_t
+    num = jnp.einsum("bhvk,bhk->bhv", C, q_t)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t)), 1.0)
+    y = num / den[..., None]
+    return (C, n, m_new), y
+
+
+def _mlstm_chunkwise(carry0, q, k, v, ig, fg, *, chunk):
+    """Chunkwise-parallel mLSTM (arXiv:2405.04517 App. / mlstm kernels):
+
+    Within a chunk of length L, with local cumulative log-forget
+    b_t = sum_{u<=t} fg_u and running stabilizer
+    m_t = b_t + max(m_prev - 0, cummax_s(ig_s - b_s)) (all relative to the
+    incoming state's stabilizer), outputs decompose into an intra-chunk
+    attention-like term  sum_{s<=t} exp(b_t - b_s + ig_s - m_t) (q_t.k_s) v_s
+    plus an inter-chunk term  exp(b_t + m_prev - m_t) q_t.C_prev. Only the
+    per-chunk (C, n, m) state crosses chunk boundaries — BPTT memory is
+    O(S/L) states instead of O(S).
+    """
+    B, S, H, hd = q.shape
+    L = chunk
+    pad = (-S) % L
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        # pad forget gates with 0 (log f = 0 -> carry state through), input
+        # gates with -inf (no contribution)
+        q, k, v = zp(q), zp(k), zp(v)
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)))
+    nC = q.shape[1] // L
+    cview = lambda a: a.reshape((B, nC, L) + a.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc, igc, fgc = map(cview, (q, k, v, ig, fg))  # (nC,B,L,H,..)
+
+    def chunk_body(carry, inp):
+        C_p, n_p, m_p = carry           # (B,H,hd,hd), (B,H,hd), (B,H)
+        q_i, k_i, v_i, ig_i, fg_i = inp  # (B,L,H,hd) / (B,L,H)
+        b = jnp.cumsum(fg_i, axis=1)     # (B,L,H)
+        g = jax.lax.cummax(ig_i - b, axis=1)       # (B,L,H)
+        # m_t = b_t + max(m_prev, cummax_{s<=t}(ig_s - b_s))
+        m_t = b + jnp.maximum(m_p[:, None], g)     # (B,L,H)
+        # intra-chunk decay matrix: D[t,s] = exp(b_t - b_s + ig_s - m_t), s<=t
+        logD = (
+            b[:, :, None] - b[:, None, :] + ig_i[:, None, :]
+            - m_t[:, :, None]
+        )  # (B,L_t,L_s,H)
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        D = jnp.where(tri[None, :, :, None], jnp.exp(logD), 0.0)
+        qk = jnp.einsum("bthd,bshd->btsh", q_i, k_i)
+        scores = qk * D
+        intra = jnp.einsum("btsh,bshd->bthd", scores, v_i)
+        inter_w = jnp.exp(b + m_p[:, None] - m_t)  # (B,L,H)
+        inter = jnp.einsum("bthd,bhvd->bthv", q_i, C_p) * inter_w[..., None]
+        num = intra + inter
+        # q.n_t = inter_w*(q.n_prev) + sum_s D[t,s] (q_t.k_s)
+        qn = inter_w * jnp.einsum("bthd,bhd->bth", q_i, n_p) + jnp.sum(scores, 2)
+        den = jnp.maximum(jnp.abs(qn), 1.0)
+        y = num / den[..., None]
+        # state update to end of chunk (t = L-1):
+        m_L = m_t[:, -1]                                   # (B,H)
+        w_end = jnp.exp(b[:, -1:, :] - b + ig_i - m_L[:, None])  # (B,L,H) s-weights
+        C_n = jnp.exp(b[:, -1] + m_p - m_L)[..., None, None] * C_p + jnp.einsum(
+            "bsh,bshv,bshk->bhvk", w_end, v_i, k_i
+        )
+        n_n = jnp.exp(b[:, -1] + m_p - m_L)[..., None] * n_p + jnp.einsum(
+            "bsh,bshk->bhk", w_end, k_i
+        )
+        return (C_n, n_n, m_L), y
+
+    (C, n, m), ys = jax.lax.scan(chunk_body, carry0, (qc, kc, vc, igc, fgc))
+    ys = ys.swapaxes(0, 1).reshape(B, nC * L, H, hd)[:, :S]
+    return (C, n, m), ys
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(rng, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(rng, 4)
+    ff = max((4 * d) // 3, 8)
+    return {
+        # Four gates (i, f, z, o): input weights (d, 4d) + block-diagonal
+        # recurrent weights (H, hd, 4*hd) + bias.
+        "wx": nn.glorot(ks[0], (d, 4 * d), dtype),
+        "r": 0.1 * jax.random.normal(ks[1], (H, hd, 4 * hd), jnp.float32),
+        "b": jnp.concatenate(
+            [jnp.zeros((d,)), 3.0 * jnp.ones((d,)), jnp.zeros((2 * d,))]
+        ).astype(jnp.float32),
+        "ffn": {
+            "wi": nn.glorot(ks[2], (d, ff), dtype),
+            "wg": nn.glorot(ks[2], (d, ff), dtype),
+            "wo": nn.glorot(ks[3], (ff, d), dtype),
+        },
+        "ffn_norm": rmsnorm_init(d, dtype),
+    }
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype):
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    z = lambda: jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, H, hd), -1e30, jnp.float32)}
+
+
+def slstm_apply(p, cfg: ModelConfig, x, *, cache=None, mode="train"):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    gates_x = (x @ p["wx"]).astype(jnp.float32) + p["b"]  # (B,S,4d)
+
+    def step(carry, gx_t):
+        c, n, h, m = carry  # each (B,H,hd)
+        rec = jnp.einsum("bhk,hkg->bhg", h, p["r"])  # (B,H,4hd)
+        # Gate layout is (i, f, z, o): wx columns in four d-blocks, r output
+        # in four hd-blocks.
+        gx = gx_t.reshape(B, 4, H, hd)  # (B,4,H,hd)
+        rc = rec.reshape(B, H, 4, hd)
+        i_t = gx[:, 0] + rc[:, :, 0]
+        f_t = gx[:, 1] + rc[:, :, 1]
+        z_t = jnp.tanh(gx[:, 2] + rc[:, :, 2])
+        o_t = jax.nn.sigmoid(gx[:, 3] + rc[:, :, 3])
+        logf = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(logf + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(logf + m - m_new)
+        c = f_p * c + i_p * z_t
+        n = jnp.maximum(f_p * n + i_p, 1.0)
+        h = o_t * (c / n)
+        return (c, n, h, m_new), h
+
+    if cache is not None and mode == "decode":
+        carry0 = (cache["c"], cache["n"], cache["h"], cache["m"])
+    else:
+        z0 = jnp.zeros((B, H, hd), jnp.float32)
+        carry0 = (z0, z0, z0, jnp.full((B, H, hd), -1e30, jnp.float32))
+    from repro.models.ssm import _segmented_scan
+
+    carry, hs = _segmented_scan(step, carry0, jnp.swapaxes(gates_x, 0, 1), segment=128)
+    y = jnp.swapaxes(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    # Gated FFN (post-up-projection, factor 4/3).
+    yn = rmsnorm(p["ffn_norm"], y, cfg.norm_eps)
+    ff = (yn @ p["ffn"]["wi"]) * jax.nn.silu(yn @ p["ffn"]["wg"])
+    out = y + ff @ p["ffn"]["wo"]
+    new_cache = (
+        {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+        if mode != "train"
+        else None
+    )
+    return out, new_cache

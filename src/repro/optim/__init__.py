@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd,
+    momentum,
+    adam,
+    adamw,
+    clip_by_global_norm,
+)
+from repro.optim.schedules import constant, cosine_decay, exponential_decay, warmup_cosine

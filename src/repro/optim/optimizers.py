@@ -1,0 +1,152 @@
+"""Minimal pure-JAX optimizer library (no optax dependency).
+
+An ``Optimizer`` is an (init, update) pair over parameter pytrees, mirroring
+the optax GradientTransformation contract:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+The paper uses plain SGD with a (possibly decayed) learning rate for all
+client updates; Adam/AdamW serve the production transformer substrate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def _resolve_lr(lr, step):
+    return lr(step) if callable(lr) else lr
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+
+
+def sgd(learning_rate) -> Optimizer:
+    def init(params):
+        del params
+        return SGDState(step=jnp.zeros([], jnp.int32))
+
+    def update(grads, state, params=None):
+        del params
+        lr = _resolve_lr(learning_rate, state.step)
+        updates = jax.tree.map(lambda g: -lr * g, grads)
+        return updates, SGDState(step=state.step + 1)
+
+    return Optimizer(init, update)
+
+
+class MomentumState(NamedTuple):
+    step: jnp.ndarray
+    velocity: Any
+
+
+def momentum(learning_rate, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return MomentumState(
+            step=jnp.zeros([], jnp.int32),
+            velocity=jax.tree.map(jnp.zeros_like, params),
+        )
+
+    def update(grads, state, params=None):
+        del params
+        lr = _resolve_lr(learning_rate, state.step)
+        vel = jax.tree.map(lambda v, g: beta * v + g, state.velocity, grads)
+        if nesterov:
+            updates = jax.tree.map(lambda v, g: -lr * (beta * v + g), vel, grads)
+        else:
+            updates = jax.tree.map(lambda v: -lr * v, vel)
+        return updates, MomentumState(step=state.step + 1, velocity=vel)
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adam(
+    learning_rate,
+    b1=0.9,
+    b2=0.999,
+    eps=1e-8,
+    weight_decay=0.0,
+    state_dtype=jnp.float32,
+) -> Optimizer:
+    """Adam; with weight_decay > 0 this is AdamW (decoupled decay).
+
+    ``state_dtype`` controls the stored moment precision (bf16 moments are a
+    memory-roofline option for very large models; math always runs in f32).
+    """
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return AdamState(
+            step=jnp.zeros([], jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        lr = _resolve_lr(learning_rate, state.step)
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree.map(
+            lambda m, g: b1 * m.astype(jnp.float32) + (1 - b1) * g, state.mu, g32
+        )
+        nu = jax.tree.map(
+            lambda v, g: b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g),
+            state.nu,
+            g32,
+        )
+        mu_hat = jax.tree.map(lambda m: m / (1 - b1 ** step.astype(jnp.float32)), mu)
+        nu_hat = jax.tree.map(lambda v: v / (1 - b2 ** step.astype(jnp.float32)), nu)
+        updates = jax.tree.map(
+            lambda m, v: -lr * m / (jnp.sqrt(v) + eps), mu_hat, nu_hat
+        )
+        if weight_decay:
+            assert params is not None, "AdamW needs params for decoupled decay"
+            updates = jax.tree.map(
+                lambda u, p: u - lr * weight_decay * p.astype(jnp.float32),
+                updates,
+                params,
+            )
+        store = lambda t: jax.tree.map(lambda x: x.astype(state_dtype), t)
+        return updates, AdamState(step=step, mu=store(mu), nu=store(nu))
+
+    return Optimizer(init, update)
+
+
+def adamw(learning_rate, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          state_dtype=jnp.float32) -> Optimizer:
+    return adam(learning_rate, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+                state_dtype=state_dtype)
+
+
+def clip_by_global_norm(max_norm: float):
+    """Returns a gradient-transform fn usable before any optimizer.update."""
+
+    def clip(grads):
+        norm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+        return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)
+
+    return clip

@@ -1,0 +1,37 @@
+"""Learning-rate schedules. All return step -> lr callables."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def exponential_decay(lr: float, decay: float, per_steps: int = 1):
+    """Per-round multiplicative decay — the paper's CIFAR schedule
+    (FedSGD decay 0.9934/round, FedAvg 0.99/round)."""
+
+    def fn(step):
+        return jnp.asarray(lr, jnp.float32) * decay ** (step / per_steps)
+
+    return fn
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.0):
+    def fn(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.asarray(lr, jnp.float32) * (final_frac + (1 - final_frac) * cos)
+
+    return fn
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    cos = cosine_decay(lr, max(total_steps - warmup_steps, 1), final_frac)
+
+    def fn(step):
+        warm = jnp.asarray(lr, jnp.float32) * (step + 1) / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return fn

@@ -1,0 +1,8 @@
+from repro.sharding.rules import (
+    param_pspecs,
+    cache_pspecs,
+    batch_pspecs,
+    opt_state_pspecs,
+    add_leading_axis,
+    named,
+)

@@ -1,0 +1,268 @@
+"""Sharding rules: parameter / cache / batch PartitionSpecs for the mesh.
+
+Layout (MaxText-style 2-D logical sharding inside a client group):
+
+    fsdp axis ("data")  — shards the *reduction* / d_model-ish dim of every
+                          large matrix (ZeRO-3 weight sharding) and the batch
+                          dim of activations and caches.
+    tp axis  ("model")  — shards heads / ff / expert dims (tensor parallel).
+    pod axis ("pod")    — multi-pod only: FedSGD replicates params across it
+                          (per-step gradient all-reduce crosses it); FedAvg
+                          round steps instead place one client-group replica
+                          per pod (leading G axis of every leaf), so only the
+                          per-round weighted average crosses it.
+
+Rules are name-based over the param tree paths produced by
+``repro.models.transformer``; any leading stack axes (layer repeats, FedAvg
+group axis) are padded with None (or the group axis name). Every rule is
+validated for divisibility against the actual mesh axis sizes — a dim that
+doesn't divide is left unsharded rather than failing at lower time.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# Trailing-dims STORAGE rule per leaf name: tuple over the *last* len(t) dims.
+#   m = tensor axis (Megatron column/row parallel — kept in COMPUTE specs)
+#   f = fsdp axis   (ZeRO-3 at-rest sharding — DROPPED in compute specs; the
+#                    step entry re-shards with with_sharding_constraint, so
+#                    GSPMD emits one weight all-gather per step and a
+#                    reduce-scatter on the gradient, never activation
+#                    all-reduces from contraction-dim shards)
+#   e = expert axis (experts over model*data — expert parallelism; kept in
+#                    both storage and compute)
+#
+# COMPUTE rule = storage rule with every 'f' tag replaced by None.
+_NAME_RULES = {
+    # embeddings / heads
+    "table": ("m", "f"),          # (V, d): vocab-parallel CE logits
+    "lm_head": ("f", "m"),        # (d, V)
+    # attention (column: wq/wk/wv; row: wo)
+    "wq": ("f", "m"),
+    "wk": ("f", "m"),
+    "wv": ("f", "m"),
+    "wo": ("m", "f"),
+    "bq": ("m",),
+    "bk": ("m",),
+    "bv": ("m",),
+    # MLA
+    "wq_a": ("f", None),
+    "wq_b": (None, "m"),
+    "wkv_a": ("f", None),
+    "wkv_b": (None, "m"),
+    # MLP (column: wi/wg; row is the dense 2-D "wo" above)
+    "wi": ("f", "m"),
+    "wg": ("f", "m"),
+    # Mamba
+    "in_proj": ("f", "m"),
+    "conv_w": (None, "m"),
+    "conv_b": ("m",),
+    "x_proj": ("m", None),
+    "dt_proj": (None, "m"),
+    "dt_bias": ("m",),
+    "A_log": ("m", None),
+    "D": ("m",),
+    "out_proj": ("m", "f"),
+    # xLSTM
+    "up": ("f", "m"),
+    "down": ("m", "f"),
+    "wx": ("f", "m"),
+    "r": (None, None, "m"),
+    "wf": (None, "m"),
+    "mq": ("f", "m"),
+    "mk": ("f", "m"),
+    "mv": ("f", "m"),
+    # MoE (names unique to moe_init, so no arity ambiguity with dense wi/wo)
+    "router": ("f", None),
+    "we_i": ("e", None, None),   # (E, d, ff): expert parallelism
+    "we_g": ("e", None, None),
+    "we_o": ("e", None, None),   # (E, ff, d)
+}
+
+
+# Attention-family leaves whose tensor-parallel sharding implies splitting a
+# HEADS dimension after reshape. GSPMD can only propagate the 16-way tiling
+# through the (d, H*hd) -> (..., H, hd) reshape when H itself is divisible by
+# the tp size (splitting hd instead puts the shard inside the attention
+# contraction and degenerates to activation all-reduces). When heads don't
+# divide, the leaf falls back to FSDP-only sharding — attention runs
+# data-parallel on the model axis for that arch (recorded in DESIGN.md).
+_Q_HEAD_GATED = {"wq", "bq", "wo"}
+_KV_HEAD_GATED = {"wk", "wv", "bk", "bv"}
+_MLA_HEAD_GATED = {"wq_b", "wkv_b"}
+
+
+def _axis(mesh: Mesh, tag, fsdp: str, tp: str):
+    if tag == "f":
+        return fsdp if fsdp in mesh.axis_names else None
+    if tag == "m":
+        return tp if tp in mesh.axis_names else None
+    if tag == "e":
+        # expert axis: prefer model*data combined, fall back to model alone
+        return "e"  # resolved with shape knowledge in _leaf_spec
+    return None
+
+
+def _gated_rule(name, rule, gates, mesh, tp):
+    """Downgrade 'm' tags to FSDP-or-replicated for head-gated leaves."""
+    if gates is None:
+        return rule
+    tp_size = mesh.shape[tp] if tp in mesh.axis_names else 1
+    n_heads, n_kv_heads, xlstm = gates
+    blocked = False
+    if xlstm and name in ("up", "down", "mq", "mk", "mv", "wx", "r", "wi", "wf"):
+        blocked = n_heads % tp_size != 0
+    if name in _Q_HEAD_GATED or name in _MLA_HEAD_GATED:
+        blocked = n_heads % tp_size != 0
+    if name in _KV_HEAD_GATED:
+        blocked = n_kv_heads % tp_size != 0
+    if not blocked:
+        return rule
+    # Replace 'm' with replication; keep 'f' (FSDP still applies).
+    return tuple(None if t == "m" else t for t in rule)
+
+
+def _leaf_spec(path, leaf, mesh: Mesh, fsdp: str, tp: str, gates=None,
+               kind: str = "storage") -> P:
+    name = None
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            name = entry.key
+            break
+    shape = leaf.shape
+    rule = _NAME_RULES.get(name)
+    if rule is None:
+        return P()  # replicate (norm scales, small biases, scalars)
+    if kind == "compute":
+        rule = tuple(None if t == "f" else t for t in rule)
+    rule = _gated_rule(name, rule, gates, mesh, tp)
+    nd = len(shape)
+    k = len(rule)
+    if nd < k:
+        return P()
+    axes: list = [None] * nd
+    for i, tag in enumerate(rule):
+        ax = _axis(mesh, tag, fsdp, tp)
+        dim = nd - k + i
+        if ax == "e":
+            m_sz = mesh.shape.get(tp, 1)
+            f_sz = mesh.shape.get(fsdp, 1)
+            if shape[dim] % (m_sz * f_sz) == 0:
+                axes[dim] = (tp, fsdp)
+            elif shape[dim] % m_sz == 0:
+                axes[dim] = tp
+            elif shape[dim] % f_sz == 0:
+                axes[dim] = fsdp
+        elif ax is not None and shape[dim] % mesh.shape[ax] == 0:
+            axes[dim] = ax
+    return P(*axes)
+
+
+def param_pspecs(params_shapes, mesh: Mesh, *, fsdp: str = "data", tp: str = "model",
+                 cfg=None, kind: str = "storage"):
+    """PartitionSpec pytree for a param (or grad) tree of ShapeDtypeStructs.
+
+    kind='storage' -> TP + ZeRO-3 at-rest sharding (train-state layout).
+    kind='compute' -> TP only (what matmuls see; the step entry bridges
+    storage->compute with with_sharding_constraint).
+
+    When ``cfg`` (a ModelConfig) is given, head-divisibility gating applies:
+    attention/xLSTM tensor-parallel sharding is dropped for archs whose head
+    counts don't divide the tp axis (see _gated_rule)."""
+    gates = None
+    if cfg is not None:
+        gates = (cfg.n_heads, cfg.n_kv_heads, bool(cfg.xlstm_pattern))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf, mesh, fsdp, tp, gates, kind),
+        params_shapes,
+    )
+
+
+def opt_state_pspecs(opt_state_shapes, mesh, *, fsdp="data", tp="model", cfg=None):
+    """Adam moment trees mirror the param tree structure (and leaf names),
+    so the same (storage) name rules apply; scalar step counters replicate."""
+    gates = None
+    if cfg is not None:
+        gates = (cfg.n_heads, cfg.n_kv_heads, bool(cfg.xlstm_pattern))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: (
+            P() if leaf.ndim == 0 else _leaf_spec(path, leaf, mesh, fsdp, tp, gates)
+        ),
+        opt_state_shapes,
+    )
+
+
+def cache_pspecs(cache_shapes, mesh: Mesh, *, batch_axis="data", tp="model"):
+    """KV caches / recurrent states. Layouts (stacked by scanned segments):
+
+        attn k/v     (repeats, B, L, K, hd)   B->data, L->model
+        mla latent   (repeats, B, L, R)       B->data, L->model
+        mla k_rope   (repeats, B, L, rope)    B->data, L->model
+        mamba ssm    (repeats, B, di, N)      B->data, di->model
+        mamba conv   (repeats, B, dconv-1, di) B->data, di->model
+        xlstm C/n/h  (repeats, B, H, ...)     B->data
+
+    Sharding the cache LENGTH over the tensor axis is the flash-decoding
+    layout: each model-rank attends to its slice of the context and the
+    blockwise-softmax stats reduce with a tiny all-reduce — this is what
+    makes 32k x 128-seq caches fit (qwen2-72b: 172 -> 10.7 GiB/device)."""
+    tp_size = mesh.shape.get(tp, 1)
+
+    def spec(path, leaf):
+        if leaf.ndim <= 1:
+            return P()
+        name = None
+        for entry in reversed(path):
+            if hasattr(entry, "key"):
+                name = entry.key
+                break
+        axes = [None] * leaf.ndim
+        if leaf.shape[1] % mesh.shape[batch_axis] == 0:
+            axes[1] = batch_axis
+        len_dim = {"k": 2, "v": 2, "latent": 2, "k_rope": 2,
+                   "ssm": 2, "conv": 3}.get(name)
+        if (
+            len_dim is not None
+            and len_dim < leaf.ndim
+            and leaf.shape[len_dim] % tp_size == 0
+        ):
+            axes[len_dim] = tp
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+def batch_pspecs(batch_shapes, mesh: Mesh, *, batch_axes=("data",)):
+    """Input batches: dim 0 (global batch) over the given axes."""
+    ax = tuple(a for a in batch_axes if a in mesh.axis_names)
+    ax_size = int(np.prod([mesh.shape[a] for a in ax])) if ax else 1
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.shape[0] % max(ax_size, 1) == 0 and ax:
+            return P(ax, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(spec, batch_shapes)
+
+
+def add_leading_axis(specs, axis_name: Optional[str]):
+    """Prepend a (possibly sharded) leading axis to every spec — used for the
+    FedAvg client-group axis (axis_name='pod') and layer stacking (None)."""
+    return jax.tree.map(
+        lambda s: P(axis_name, *tuple(s)),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def named(mesh: Mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )

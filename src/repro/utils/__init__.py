@@ -1,0 +1,9 @@
+from repro.utils.tree import (
+    tree_add,
+    tree_scale,
+    tree_weighted_mean,
+    tree_zeros_like,
+    tree_size,
+    tree_l2_norm,
+    tree_cast,
+)

@@ -1,0 +1,69 @@
+"""Pytree arithmetic helpers used across the framework.
+
+All model parameters, optimizer states and client updates are plain pytrees
+(nested dicts of jnp arrays). These helpers keep the FedAvg math readable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_weighted_mean(stacked, weights):
+    """Weighted mean over leading (client) axis of every leaf.
+
+    ``stacked``: pytree whose leaves have shape (K, ...) — one slice per
+    client. ``weights``: (K,) array; normalized internally so callers can pass
+    raw example counts n_k (Algorithm 1 server line: w <- sum_k n_k/n w_k).
+    """
+    weights = jnp.asarray(weights, jnp.float32)
+    weights = weights / jnp.sum(weights)
+
+    def avg(leaf):
+        w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        return jnp.sum(leaf * w, axis=0)
+
+    return jax.tree.map(avg, stacked)
+
+
+def tree_size(a) -> int:
+    """Total number of parameters."""
+    return sum(int(x.size) for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def tree_l2_norm(a):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(a))
+    )
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, a
+    )
+
+
+def tree_all_finite(a):
+    leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(a)
+              if jnp.issubdtype(x.dtype, jnp.floating)]
+    return jnp.all(jnp.stack(leaves)) if leaves else jnp.array(True)

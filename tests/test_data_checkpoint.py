@@ -1,0 +1,76 @@
+"""Data pipeline batching semantics + checkpoint round-trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data.batching import client_epoch_batches, windows_from_sequence
+from repro.data.synthetic import make_char_corpus, make_image_classification
+
+
+def test_client_epoch_batches_schedule(rng):
+    x = rng.normal(size=(600, 4)).astype(np.float32)
+    y = rng.integers(0, 10, 600).astype(np.int32)
+    bx, by = client_epoch_batches(x, y, batch_size=10, epochs=5, seed=0)
+    # Algorithm 1: E epochs of n/B batches -> 5 * 60 = 300 steps of size 10
+    assert bx.shape == (300, 10, 4) and by.shape == (300, 10)
+    # every epoch covers the full client dataset
+    first_epoch = bx[:60].reshape(-1, 4)
+    assert len(np.unique(first_epoch, axis=0)) == 600
+
+
+def test_client_epoch_batches_binf():
+    x = np.arange(24, dtype=np.float32).reshape(12, 2)
+    bx, by = client_epoch_batches(x, None, batch_size=None, epochs=3, seed=0)
+    assert bx.shape == (3, 12, 2)  # B=inf: one full batch per epoch
+
+
+def test_windows_from_sequence():
+    seq = np.arange(100, dtype=np.int32)
+    x, y = windows_from_sequence(seq, unroll=10)
+    assert x.shape == (9, 10)
+    np.testing.assert_array_equal(y[0], x[0] + 1)  # next-token labels
+
+
+def test_char_corpus_unbalanced():
+    train, test, V = make_char_corpus(n_roles=50, mean_chars_per_role=500, seed=1)
+    sizes = np.array([len(t) for t in train])
+    assert len(train) == 50 and V == len(__import__("repro.data.synthetic", fromlist=["CHAR_VOCAB"]).CHAR_VOCAB)
+    assert sizes.max() / max(sizes.min(), 1) > 3  # heavy imbalance (lognormal)
+
+
+def test_image_dataset_learnable_structure():
+    train, test, templates = make_image_classification(500, 100, seed=0)
+    # same-class examples are more correlated than cross-class
+    x = train.x.reshape(len(train.x), -1)
+    same, diff = [], []
+    for c in range(3):
+        idx = np.flatnonzero(train.y == c)[:10]
+        other = np.flatnonzero(train.y != c)[:10]
+        same.append(np.mean(x[idx] @ x[idx].T))
+        diff.append(np.mean(x[idx] @ x[other].T))
+    assert np.mean(same) > np.mean(diff)
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    tree = {
+        "a": jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32)),
+        "nested": {"b": jnp.arange(5, dtype=jnp.int32)},
+    }
+    save_checkpoint(tmp_path, tree, step=7, metadata={"round": 7})
+    save_checkpoint(tmp_path, tree, step=12, metadata={"round": 12})
+    assert latest_step(tmp_path) == 12
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    restored, meta = restore_checkpoint(tmp_path, like)
+    assert meta["round"] == 12
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(a, b)
+    restored7, meta7 = restore_checkpoint(tmp_path, like, step=7)
+    assert meta7["round"] == 7
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    save_checkpoint(tmp_path, {"a": jnp.zeros(3)}, step=1)
+    with pytest.raises(AssertionError):
+        restore_checkpoint(tmp_path, {"b": jnp.zeros(3)})

@@ -1,0 +1,108 @@
+"""Algorithm 1 semantics: FedSGD equivalence, weighted averaging, sampling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fedavg import FedAvgConfig, fedavg_round, sample_clients, server_aggregate
+from repro.models import mnist_2nn
+from repro.utils.tree import tree_weighted_mean
+
+
+def _toy_clients(rng, sizes, d=20, classes=5):
+    xs = [rng.normal(size=(n, d)).astype(np.float32) for n in sizes]
+    ys = [rng.integers(0, classes, n).astype(np.int32) for n in sizes]
+    return xs, ys
+
+
+def _round_batch(xs, ys, maxb):
+    m = len(xs)
+    bx = np.zeros((m, 1, maxb, xs[0].shape[1]), np.float32)
+    by = np.zeros((m, 1, maxb), np.int32)
+    for i, (x, y) in enumerate(zip(xs, ys)):
+        reps = -(-maxb // len(x))
+        bx[i, 0] = np.concatenate([x] * reps)[:maxb]
+        by[i, 0] = np.concatenate([y] * reps)[:maxb]
+    return jnp.asarray(bx), jnp.asarray(by)
+
+
+def test_fedavg_e1_binf_equals_fedsgd(rng):
+    """Paper Section 2: FedAvg(E=1, B=inf) == FedSGD to machine precision."""
+    model = mnist_2nn(n_classes=5, d_in=20)
+    params = model.init(jax.random.PRNGKey(0))
+    sizes = [8, 16, 24]
+    xs, ys = _toy_clients(rng, sizes)
+    bx, by = _round_batch(xs, ys, max(sizes))
+    w = jnp.asarray(np.array(sizes, np.float32))
+    lr = 0.5
+    newp, _ = fedavg_round(
+        model.loss, params, (bx, by), jnp.ones((3, 1), jnp.float32), w, lr
+    )
+
+    def global_loss(p):
+        tot = 0.0
+        for i, n in enumerate(sizes):
+            l, _ = model.loss(p, (bx[i, 0], by[i, 0]))
+            tot = tot + (n / sum(sizes)) * l
+        return tot
+
+    ref = jax.tree.map(lambda p, g: p - lr * g, params, jax.grad(global_loss)(params))
+    for a, b in zip(jax.tree.leaves(newp), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_sample_clients_size_and_uniqueness():
+    r = np.random.default_rng(0)
+    for C, K, want in [(0.1, 100, 10), (0.0, 100, 1), (1.0, 100, 100), (0.2, 7, 1)]:
+        s = sample_clients(r, K, C)
+        assert len(s) == max(want, 1) or (C == 0.2 and len(s) == 1)
+        assert len(set(s.tolist())) == len(s)
+
+
+def test_sample_clients_m_formula():
+    r = np.random.default_rng(1)
+    assert len(sample_clients(r, 100, 0.2)) == 20
+    assert len(sample_clients(r, 100, 0.0)) == 1  # max(C*K, 1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    k=st.integers(2, 6),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_weighted_mean_properties(k, n, seed):
+    r = np.random.default_rng(seed)
+    stacked = {"w": jnp.asarray(r.normal(size=(k, n)).astype(np.float32))}
+    weights = jnp.asarray(r.uniform(0.1, 10.0, k).astype(np.float32))
+    avg = tree_weighted_mean(stacked, weights)
+    # scale invariance of weights
+    avg2 = tree_weighted_mean(stacked, weights * 7.3)
+    np.testing.assert_allclose(avg["w"], avg2["w"], rtol=1e-5, atol=1e-6)
+    # convex combination stays within [min, max]
+    assert np.all(np.asarray(avg["w"]) <= np.asarray(stacked["w"]).max(0) + 1e-5)
+    assert np.all(np.asarray(avg["w"]) >= np.asarray(stacked["w"]).min(0) - 1e-5)
+    # identical clients -> identity
+    same = {"w": jnp.broadcast_to(stacked["w"][:1], stacked["w"].shape)}
+    np.testing.assert_allclose(
+        tree_weighted_mean(same, weights)["w"], stacked["w"][0], rtol=1e-5, atol=1e-6
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_weighted_mean_permutation_invariance(seed):
+    r = np.random.default_rng(seed)
+    stacked = jnp.asarray(r.normal(size=(4, 9)).astype(np.float32))
+    weights = jnp.asarray(r.uniform(0.5, 2.0, 4).astype(np.float32))
+    perm = r.permutation(4)
+    a = server_aggregate(stacked, weights)
+    b = server_aggregate(stacked[perm], weights[perm])
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_expected_updates_per_round():
+    cfg = FedAvgConfig(C=0.1, E=5, B=10)
+    # paper: u = E*n/(K*B); MNIST n=60000, K=100 -> 5*600/10 = 300
+    assert cfg.expected_updates_per_round(60000, 100) == pytest.approx(300.0)

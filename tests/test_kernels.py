@@ -1,0 +1,141 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(deliverable c). Small shapes — interpret mode executes the kernel body in
+Python per grid cell."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.ce_loss import fused_cross_entropy
+from repro.kernels.fedavg_agg import fedavg_aggregate
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssm_scan import ssm_scan
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,D,bq,bk,causal,window", [
+    (16, 8, 8, 8, True, 0),
+    (37, 16, 8, 8, True, 0),
+    (24, 8, 8, 16, False, 0),
+    (33, 8, 16, 8, True, 9),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(rng, S, D, bq, bk, causal, window, dtype):
+    q = jnp.asarray(rng.normal(size=(2, S, D)).astype(np.float32)).astype(dtype)
+    k = jnp.asarray(rng.normal(size=(2, S, D)).astype(np.float32)).astype(dtype)
+    v = jnp.asarray(rng.normal(size=(2, S, D)).astype(np.float32)).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=bq, block_k=bk, interpret=True)
+    want = ref.flash_attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                                   v.astype(jnp.float32), causal=causal, window=window)
+    atol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), want, atol=atol
+    )
+
+
+def test_mha_flash_gqa_wrapper(rng):
+    B, S, H, K, D = 1, 16, 4, 2, 8
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, K, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, K, D)).astype(np.float32))
+    out = ops.mha_flash(q, k, v, block_q=8, block_k=8, interpret=True)
+    from repro.models.attention_core import naive_attention
+    want = naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out, want, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fedavg aggregation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K,N,block", [(2, 64, 16), (5, 1000, 128), (8, 33, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_aggregate_sweep(rng, K, N, block, dtype):
+    st_ = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32)).astype(dtype)
+    w = jnp.asarray(rng.uniform(0.1, 5, K).astype(np.float32))
+    w = w / w.sum()
+    out = fedavg_aggregate(st_, w, block_n=block, interpret=True)
+    want = ref.fedavg_aggregate_ref(st_, w)
+    atol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(out.astype(np.float32), want.astype(np.float32), atol=atol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(k=st.integers(2, 6), n=st.integers(4, 200), seed=st.integers(0, 2**31 - 1))
+def test_fedavg_aggregate_hypothesis(k, n, seed):
+    r = np.random.default_rng(seed)
+    st_ = jnp.asarray(r.normal(size=(k, n)).astype(np.float32))
+    w = jnp.asarray(r.uniform(0.1, 5, k).astype(np.float32))
+    w = w / w.sum()
+    out = fedavg_aggregate(st_, w, block_n=32, interpret=True)
+    np.testing.assert_allclose(out, ref.fedavg_aggregate_ref(st_, w), atol=1e-5)
+
+
+def test_tree_fedavg_aggregate_matches_server_line(rng):
+    """Kernel path == Algorithm 1 server line on a real param pytree."""
+    from repro.models import mnist_2nn
+    from repro.utils.tree import tree_weighted_mean
+
+    model = mnist_2nn(n_classes=3, d_in=6)
+    stacked = jax.vmap(lambda s: model.init(jax.random.PRNGKey(s)))(jnp.arange(3))
+    w = jnp.asarray([1.0, 2.0, 3.0])
+    a = ops.tree_fedavg_aggregate(stacked, w, interpret=True)
+    b = tree_weighted_mean(stacked, w)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(x, y, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# selective scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,D,N,bd", [(1, 8, 4, 2, 4), (2, 24, 8, 4, 4), (1, 16, 16, 8, 8)])
+def test_ssm_scan_sweep(rng, B, T, D, N, bd):
+    dt = jnp.asarray(np.abs(rng.normal(size=(B, T, D))).astype(np.float32) * 0.1)
+    Bm = jnp.asarray(rng.normal(size=(B, T, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.normal(size=(B, T, N)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(B, T, D)).astype(np.float32))
+    A = -jnp.asarray(np.abs(rng.normal(size=(D, N))).astype(np.float32))
+    h0 = jnp.zeros((B, D, N))
+    y, h = ssm_scan(dt, Bm, Cm, x, A, h0, block_d=bd, interpret=True)
+    y2, h2 = ref.ssm_scan_ref(dt, Bm, Cm, x, A, h0)
+    np.testing.assert_allclose(y, y2, atol=1e-5)
+    np.testing.assert_allclose(h, h2, atol=1e-5)
+
+
+def test_ssm_scan_chunked_state_carry(rng):
+    """ops.mamba_ssm_scan with chunking == unchunked (state threads through)."""
+    B, T, D, N = 1, 20, 4, 2
+    dt = jnp.asarray(np.abs(rng.normal(size=(B, T, D))).astype(np.float32) * 0.1)
+    Bm = jnp.asarray(rng.normal(size=(B, T, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.normal(size=(B, T, N)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(B, T, D)).astype(np.float32))
+    A = -jnp.asarray(np.abs(rng.normal(size=(D, N))).astype(np.float32))
+    h0 = jnp.zeros((B, D, N))
+    y1, h1 = ops.mamba_ssm_scan(dt, Bm, Cm, x, A, h0, chunk=8, interpret=True)
+    y2, h2 = ref.ssm_scan_ref(dt, Bm, Cm, x, A, h0)
+    np.testing.assert_allclose(y1, y2, atol=1e-5)
+    np.testing.assert_allclose(h1, h2, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused cross entropy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,d,V,bt,bv", [(8, 8, 32, 4, 8), (7, 16, 50, 4, 16), (16, 8, 17, 8, 8)])
+def test_fused_ce_sweep(rng, T, d, V, bt, bv):
+    hid = jnp.asarray(rng.normal(size=(T, d)).astype(np.float32))
+    head = jnp.asarray(rng.normal(size=(d, V)).astype(np.float32))
+    lbl = jnp.asarray(rng.integers(0, V, T).astype(np.int32))
+    out = fused_cross_entropy(hid, head, lbl, block_t=bt, block_v=bv, interpret=True)
+    logits = hid @ head
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lbl[:, None], axis=-1)[:, 0]
+    np.testing.assert_allclose(out, logz - gold, atol=1e-5)

@@ -14,7 +14,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import FedAvgConfig, FederatedTrainer, make_eval_fn
+from repro.core import FedAvgConfig, RoundEngine, make_eval_fn
 from repro.data import (
     make_image_classification,
     partition_iid,
@@ -52,7 +52,7 @@ def run_setting(model_name, clients, test, cfg, rounds, target, flatten=True):
     params = model.init(jax.random.PRNGKey(0))
     xt = test.x.reshape(len(test.x), -1) if flatten else test.x
     ev = make_eval_fn(model.apply, xt, test.y)
-    tr = FederatedTrainer(model.loss, params, clients, cfg, eval_fn=ev)
+    tr = RoundEngine(model.loss, params, clients, cfg, eval_fn=ev)
     t0 = time.time()
     h = tr.run(rounds, eval_every=1, target_acc=target)
     wall = time.time() - t0

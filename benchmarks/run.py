@@ -17,6 +17,7 @@ from benchmarks import (
     fig3_large_E,
     kernels_bench,
     roofline_report,
+    round_engine,
     shakespeare_lstm,
     table1_client_fraction,
     table2_local_computation,
@@ -32,6 +33,7 @@ SUITES = {
     "shakespeare": shakespeare_lstm.main,
     "kernels": kernels_bench.main,
     "roofline": roofline_report.main,
+    "round_engine": round_engine.main,
 }
 
 

@@ -13,7 +13,7 @@ import argparse
 
 import jax
 
-from repro.core import FedAvgConfig, FederatedTrainer, make_eval_fn
+from repro.core import FedAvgConfig, RoundEngine, make_eval_fn
 from repro.data import (
     make_image_classification,
     partition_iid,
@@ -60,7 +60,7 @@ def main():
     cfg = FedAvgConfig(C=args.C, E=args.E, B=B, lr=args.lr, seed=args.seed)
     xt = test.x.reshape(len(test.x), -1) if flatten else test.x
     ev = make_eval_fn(model.apply, xt, test.y)
-    tr = FederatedTrainer(model.loss, params, clients, cfg, eval_fn=ev)
+    tr = RoundEngine(model.loss, params, clients, cfg, eval_fn=ev)
     hist = tr.run(args.rounds, eval_every=1, target_acc=args.target, verbose=True)
     r = hist.rounds_to_target(args.target)
     u = cfg.expected_updates_per_round(len(train.x), args.clients)

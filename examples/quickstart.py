@@ -4,7 +4,7 @@
 """
 import jax
 
-from repro.core import FedAvgConfig, FederatedTrainer, make_eval_fn
+from repro.core import FedAvgConfig, RoundEngine, make_eval_fn
 from repro.data import make_image_classification, partition_pathological_noniid
 from repro.models import mnist_2nn
 
@@ -20,8 +20,10 @@ model = mnist_2nn()
 params = model.init(jax.random.PRNGKey(0))
 cfg = FedAvgConfig(C=0.2, E=5, B=10, lr=0.05)
 
-# 3. Run rounds until 80% test accuracy.
+# 3. Run rounds until 80% test accuracy. RoundEngine packs all 50 clients
+#    onto the device once and reuses ONE compiled round executable.
 ev = make_eval_fn(model.apply, test.x.reshape(len(test.x), -1), test.y)
-trainer = FederatedTrainer(model.loss, params, clients, cfg, eval_fn=ev)
-history = trainer.run(30, eval_every=1, target_acc=0.80, verbose=True)
+engine = RoundEngine(model.loss, params, clients, cfg, eval_fn=ev)
+history = engine.run(30, eval_every=1, target_acc=0.80, verbose=True)
 print("rounds to 80%:", history.rounds_to_target(0.80))
+print("round executables compiled:", engine.num_compilations)

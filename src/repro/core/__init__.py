@@ -5,7 +5,16 @@ from repro.core.fedavg import (
     sample_clients,
     fedavg_round,
 )
-from repro.core.simulation import FederatedTrainer, History, make_eval_fn
+from repro.core.engine import (
+    History,
+    RoundBatch,
+    RoundEngine,
+    RoundRecord,
+    RoundState,
+    RoundStep,
+    build_simulation_round_step,
+)
+from repro.core.simulation import FederatedTrainer, build_round_batch_host, make_eval_fn
 from repro.core.losses import softmax_cross_entropy, accuracy, classification_loss, lm_loss
 
 

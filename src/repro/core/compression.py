@@ -138,32 +138,58 @@ def topk_codec(keep_frac: float = 0.05) -> Codec:
     return Codec(encode, decode, nbytes, unbiased=False)
 
 
+def build_compressed_round_step(loss_fn, codec: Codec):
+    """Compressed FedAvg as a unified ``round_step`` (``core.engine``
+    protocol): each client uploads codec(Δ_k) instead of w_k; the server
+    averages the decoded deltas and applies them to the global model.
+
+    The codec hook now targets the same (state, batch) API as the plain
+    simulation engine and the production mesh round, so swapping
+    compression in/out is a one-line change at the call site. ``batch.key``
+    seeds the stochastic codecs; ``batch.client_weights`` are raw counts
+    (normalized once in the weighted average)."""
+    from repro.core.fedavg import client_update
+    from repro.utils.tree import tree_weighted_mean
+
+    def round_step(state, rb):
+        params = state.params
+        m = jax.tree.leaves(rb.data)[0].shape[0]
+
+        def one_client(i, b, msk):
+            w_k, losses = client_update(loss_fn, params, b, msk, rb.lr)
+            delta = jax.tree.map(lambda a, b_: a - b_, w_k, params)
+            enc, aux = codec.encode(jax.random.fold_in(rb.key, i), delta)
+            return codec.decode(enc, aux), losses
+
+        deltas, losses = [], []
+        for i in range(m):
+            b = jax.tree.map(lambda a: a[i], rb.data)
+            d, l = one_client(i, b, rb.step_mask[i])
+            deltas.append(d)
+            losses.append(l)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
+        avg_delta = tree_weighted_mean(stacked, rb.client_weights)
+        new_params = jax.tree.map(
+            lambda p, d: (p + d).astype(p.dtype), params, avg_delta
+        )
+        return state._replace(params=new_params), {"loss": jnp.mean(jnp.stack(losses))}
+
+    return round_step
+
+
 def compressed_round(loss_fn, params, batches, step_mask, weights, lr, codec, key):
     """One FedAvg round where each client uploads codec(Δ_k) instead of w_k.
 
     Equivalent to fedavg_round when codec is the identity; with an unbiased
-    codec, E[new_params] equals the uncompressed round's result."""
-    from repro.core.fedavg import client_update
-    from repro.utils.tree import tree_weighted_mean
+    codec, E[new_params] equals the uncompressed round's result. Thin shim
+    over :func:`build_compressed_round_step` for positional-arg callers."""
+    from repro.core.engine import RoundBatch, RoundState
 
-    m = jax.tree.leaves(batches)[0].shape[0]
-
-    def one_client(i, b, msk):
-        w_k, losses = client_update(loss_fn, params, b, msk, lr)
-        delta = jax.tree.map(lambda a, b_: a - b_, w_k, params)
-        enc, aux = codec.encode(jax.random.fold_in(key, i), delta)
-        return codec.decode(enc, aux), losses
-
-    deltas, losses = [], []
-    for i in range(m):
-        b = jax.tree.map(lambda a: a[i], batches)
-        d, l = one_client(i, b, step_mask[i])
-        deltas.append(d)
-        losses.append(l)
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
-    avg_delta = tree_weighted_mean(stacked, weights)
-    new_params = jax.tree.map(lambda p, d: (p + d).astype(p.dtype), params, avg_delta)
-    return new_params, jnp.mean(jnp.stack(losses))
+    step = build_compressed_round_step(loss_fn, codec)
+    state, metrics = step(
+        RoundState(params), RoundBatch(batches, step_mask, weights, lr=lr, key=key)
+    )
+    return state.params, metrics["loss"]
 
 
 def upload_bytes_per_round(codec: Codec, params) -> int:

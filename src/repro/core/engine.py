@@ -1,0 +1,392 @@
+"""Unified RoundEngine: the statically-shaped FedAvg round pipeline.
+
+One round, one executable::
+
+      pack (once, host)          every round (device, jitted once)
+    ┌──────────────────┐   ┌───────────────────────────────────────────┐
+    │ pack_clients     │   │ gather rows      x[ids] -> (m, n_pad, ..) │
+    │  (K, n_pad, ...) │──▶│ sample/permute   per-(client, epoch) perm │
+    │  counts, steps,  │   │ batch            -> (m, E*spe, B, ...)    │
+    │  shape buckets   │   │ vmapped ClientUpdate (masked SGD scan)    │
+    │                  │   │ Pallas fedavg_aggregate over (m, N)       │
+    └──────────────────┘   │ broadcast new global params               │
+                           └───────────────────────────────────────────┘
+
+Why: communication rounds are the paper's scarce resource, so the per-round
+hot loop must not pay host-side batch assembly or shape-driven recompiles.
+The legacy path rebuilt ragged numpy stacks every round with round-varying
+``(max_steps, max_b)``, re-jitting ``fedavg_round`` whenever the sampled
+cohort's shapes changed. Here the whole population is packed ONCE into
+device-resident arrays (``data.batching.pack_clients``; power-of-two shape
+buckets give the padding accounting) and each round is a pure on-device
+gather + permutation, so ``run(n_rounds)`` reuses a single compiled
+executable — verified by the jit-cache-stats test in tests/test_engine.py.
+
+The server step routes through the Pallas ``fedavg_aggregate`` kernel via
+the ``tree_ravel_stacked``/``tree_unravel`` adapters (fp32 accumulation;
+``interpret=True`` fallback on non-TPU backends).
+
+``round_step`` protocol
+-----------------------
+Both this engine (:func:`build_simulation_round_step`) and the production
+mesh path (``core.local_sgd.as_round_step``) expose the same callable
+shape::
+
+    round_step(state: RoundState, batch: RoundBatch) -> (RoundState, metrics)
+
+so benchmarks, examples and the compression codecs target one API instead
+of two divergent ones. ``core.simulation.FederatedTrainer`` is now a thin
+wrapper over :class:`RoundEngine` (see docs/engine.md for migration notes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    List,
+    NamedTuple,
+    Optional,
+    Protocol,
+    Sequence,
+    Tuple,
+)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fedavg import FedAvgConfig, client_update, sample_clients, server_aggregate
+from repro.data.batching import pack_clients
+from repro.kernels.ops import default_interpret
+
+
+# ---------------------------------------------------------------------------
+# round_step protocol
+# ---------------------------------------------------------------------------
+
+class RoundState(NamedTuple):
+    """Everything a round mutates. Simulation uses only ``params``; the
+    production path threads per-group inner optimizer state and the
+    FedOpt/DiLoCo outer optimizer state."""
+
+    params: Any
+    inner_state: Any = None
+    outer_state: Any = None
+
+
+class RoundBatch(NamedTuple):
+    """One round's worth of client data, implementation-layout pytree.
+
+    data:           simulation: leaves (m, n_steps, B, ...);
+                    production: leaves (H, G, ...).
+    step_mask:      (m, n_steps) 0/1 — padded steps are no-ops (simulation
+                    only; None on the production path).
+    client_weights: (m,) or (G,) RAW example counts n_k. Normalization
+                    happens exactly once, inside ``server_aggregate``.
+    lr:             client learning rate for this round (None if the inner
+                    optimizer owns it).
+    key:            PRNG key for stochastic codecs (compression path).
+    """
+
+    data: Any
+    step_mask: Optional[jnp.ndarray]
+    client_weights: jnp.ndarray
+    lr: Any = None
+    key: Any = None
+
+
+class RoundStep(Protocol):
+    """The single per-round contract every FedAvg implementation exposes."""
+
+    def __call__(
+        self, state: RoundState, batch: RoundBatch
+    ) -> Tuple[RoundState, Dict[str, jnp.ndarray]]: ...
+
+
+def build_simulation_round_step(
+    loss_fn: Callable,
+    *,
+    interpret: Optional[bool] = None,
+    accum_dtype=jnp.float32,
+) -> RoundStep:
+    """RoundStep over explicit (m, n_steps, B, ...) batches: vmapped
+    ClientUpdate then the Pallas-backed server aggregation. This is the
+    compiled core of :class:`RoundEngine` and the reference implementation
+    of the protocol."""
+    interpret = default_interpret() if interpret is None else interpret
+
+    def round_step(state: RoundState, rb: RoundBatch):
+        upd = jax.vmap(
+            lambda b, msk: client_update(loss_fn, state.params, b, msk, rb.lr)
+        )
+        client_params, losses = upd(rb.data, rb.step_mask)
+        new_params = server_aggregate(
+            client_params,
+            rb.client_weights,
+            interpret=interpret,
+            accum_dtype=accum_dtype,
+        )
+        w = rb.client_weights / jnp.sum(rb.client_weights)
+        per_client = jnp.sum(losses * rb.step_mask, axis=1) / jnp.maximum(
+            jnp.sum(rb.step_mask, axis=1), 1.0
+        )
+        return state._replace(params=new_params), {"loss": jnp.sum(w * per_client)}
+
+    return round_step
+
+
+# ---------------------------------------------------------------------------
+# history (moved from core.simulation; re-exported there for compatibility)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RoundRecord:
+    round: int
+    train_loss: float
+    test_acc: Optional[float] = None
+    test_loss: Optional[float] = None
+    wall_s: float = 0.0
+
+
+@dataclasses.dataclass
+class History:
+    records: List[RoundRecord] = dataclasses.field(default_factory=list)
+
+    def accuracy_curve(self) -> List[Tuple[int, float]]:
+        return [(r.round, r.test_acc) for r in self.records if r.test_acc is not None]
+
+    def rounds_to_target(self, target: float) -> Optional[float]:
+        """Paper's metric: make the curve monotone (best-so-far), then find
+        the first crossing of ``target`` with linear interpolation between
+        evaluated rounds. If the FIRST evaluated round already crosses the
+        target there is nothing to interpolate from — return that round's
+        index (the old code interpolated from a fictitious (0, 0.0) point,
+        under-reporting the count)."""
+        curve = self.accuracy_curve()
+        if not curve:
+            return None
+        best = -np.inf
+        mono = []
+        for rnd, acc in curve:
+            best = max(best, acc)
+            mono.append((rnd, best))
+        prev: Optional[Tuple[int, float]] = None
+        for rnd, acc in mono:
+            if acc >= target:
+                if prev is None or acc == prev[1]:
+                    return float(rnd)
+                prev_r, prev_a = prev
+                frac = (target - prev_a) / (acc - prev_a)
+                return float(prev_r + frac * (rnd - prev_r))
+            prev = (rnd, acc)
+        return None
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class RoundEngine:
+    """Algorithm 1 over a packed client population, one executable per run.
+
+    Construction packs ``client_data`` once (see module docstring); each
+    ``round()`` samples a cohort host-side (cheap: m integers) and runs the
+    fully on-device gather → permute → ClientUpdate → Pallas-aggregate
+    pipeline under a single ``jax.jit``. ``num_compilations`` exposes the
+    jit cache size so tests can assert the static-shape claim.
+
+    Cost model: device memory is K x (pool of the LARGEST client) and each
+    round scans the largest client's step count (smaller clients mask the
+    tail). That trade buys zero recompiles and zero host assembly; for
+    populations with extreme size skew (one client 50x the median) the
+    padding dominates and the legacy host path
+    (``simulation.build_round_batch_host`` + ``fedavg_round``) can be the
+    better tool — ``packed.overhead()`` quantifies the ratio.
+    """
+
+    def __init__(
+        self,
+        loss_fn: Callable,
+        init_params,
+        client_data: Sequence[Tuple[np.ndarray, Optional[np.ndarray]]],
+        cfg: FedAvgConfig,
+        eval_fn: Optional[Callable] = None,
+        *,
+        interpret: Optional[bool] = None,
+        accum_dtype=jnp.float32,
+    ):
+        self.loss_fn = loss_fn
+        self.params = init_params
+        self.cfg = cfg
+        self.eval_fn = eval_fn
+        self.rng = np.random.default_rng(cfg.seed)
+        self.round_idx = 0
+        self.history = History()
+        self.interpret = default_interpret() if interpret is None else interpret
+        self.accum_dtype = accum_dtype
+
+        packed = pack_clients(client_data, cfg.B)
+        self._x = jnp.asarray(packed.x)
+        self._y = jnp.asarray(packed.y) if packed.y is not None else None
+        self._counts = jnp.asarray(packed.counts)
+        self._spe = jnp.asarray(packed.steps_per_epoch)
+        # Keep only the metadata; the numpy pool would otherwise double
+        # peak memory for the whole run after its device upload.
+        self.packed = packed._replace(x=None, y=None)
+        self._round_jit = jax.jit(
+            partial(
+                _engine_round,
+                loss_fn,
+                E=cfg.E,
+                spe=packed.max_real_steps_per_epoch,
+                B=packed.batch_size,
+                has_labels=self._y is not None,
+                interpret=self.interpret,
+                accum_dtype=jnp.dtype(accum_dtype),
+            ),
+            static_argnames=(),
+        )
+
+    # -- introspection ----------------------------------------------------
+
+    @property
+    def num_clients(self) -> int:
+        return self.packed.num_clients
+
+    @property
+    def num_compilations(self) -> int:
+        """Distinct executables behind the round loop (jax.jit cache size)."""
+        return self._round_jit._cache_size()
+
+    def lr_at(self, rnd: int) -> float:
+        lr = self.cfg.lr(rnd) if callable(self.cfg.lr) else self.cfg.lr
+        return float(lr) * self.cfg.lr_decay**rnd
+
+    # -- the round loop ---------------------------------------------------
+
+    def _next_round_inputs(self):
+        selected = sample_clients(self.rng, self.num_clients, self.cfg.C)
+        key = jax.random.PRNGKey(int(self.rng.integers(2**31)))
+        lr = jnp.float32(self.lr_at(self.round_idx))
+        return jnp.asarray(selected, jnp.int32), key, lr
+
+    def round(self) -> Dict[str, float]:
+        """One synchronous FedAvg round; returns {'loss': ...}."""
+        ids, key, lr = self._next_round_inputs()
+        self.params, loss = self._round_jit(
+            self.params, self._x, self._y, self._counts, self._spe, ids, key, lr
+        )
+        self.round_idx += 1
+        return {"loss": loss}
+
+    def run(
+        self,
+        n_rounds: int,
+        eval_every: int = 1,
+        target_acc: Optional[float] = None,
+        verbose: bool = False,
+    ) -> History:
+        for i in range(n_rounds):
+            t0 = time.time()
+            metrics = self.round()
+            rec = RoundRecord(
+                round=self.round_idx,
+                train_loss=float(metrics["loss"]),
+                wall_s=time.time() - t0,
+            )
+            # i, not self.round_idx, for the last-round check: round_idx is
+            # cumulative across run() calls, so a second run(n) would never
+            # hit its own final-round evaluation.
+            if self.eval_fn is not None and (
+                self.round_idx % eval_every == 0 or i == n_rounds - 1
+            ):
+                ev = self.eval_fn(self.params)
+                rec.test_acc = float(ev["acc"])
+                rec.test_loss = float(ev.get("loss", np.nan))
+                if verbose:
+                    print(
+                        f"round {self.round_idx:5d} loss {rec.train_loss:.4f} "
+                        f"test_acc {rec.test_acc:.4f}"
+                    )
+                self.history.records.append(rec)
+                if target_acc is not None and rec.test_acc >= target_acc:
+                    break
+            else:
+                self.history.records.append(rec)
+        return self.history
+
+    # -- testing hooks -----------------------------------------------------
+
+    def materialize_round_batch(self, ids, key):
+        """Assemble (batches, step_mask, weights) exactly as the jitted round
+        does — for equivalence tests and the legacy-vs-engine benchmark."""
+        return _assemble_batches(
+            self._x, self._y, self._counts, self._spe,
+            jnp.asarray(ids, jnp.int32), key,
+            E=self.cfg.E, spe=self.packed.max_real_steps_per_epoch,
+            B=self.packed.batch_size, has_labels=self._y is not None,
+        )
+
+
+# The round body lives at module level so the jit cache key is stable and
+# introspectable; everything shape-like is a closed-over Python int.
+
+def _assemble_batches(px, py, counts, spe_arr, ids, key, *, E, spe, B, has_labels):
+    m = ids.shape[0]
+    n_pad = px.shape[1]
+    xs = jnp.take(px, ids, axis=0)                       # (m, n_pad, ...)
+    ys = jnp.take(py, ids, axis=0) if has_labels else None
+    w = jnp.take(counts, ids)                            # (m,)
+    spe_k = jnp.take(spe_arr, ids)                       # (m,) real steps/epoch
+    # One fresh draw order per (client, epoch), the on-device analogue of
+    # per-epoch reshuffling in ClientUpdate. Keying the sort by u + 2*[row
+    # is padding] puts a uniform permutation of the client's n_k REAL rows
+    # first and the tiled padding rows (in random order) after, so a
+    # client's active steps (spe_k * B <= n_k rows) sample its own examples
+    # WITHOUT replacement — exactly the legacy host semantics — and tiled
+    # duplicates are never over-drawn. Only the first spe*B positions feed
+    # the scan; ``spe`` is the largest REAL per-client step count, which
+    # can be one below n_pad // B (the pool keeps ceil rows so no example
+    # is truncated).
+    keys = jax.random.split(key, m * E)
+    n_real = jnp.repeat(jnp.take(counts, ids).astype(jnp.int32), E)  # (m*E,)
+
+    def draw_order(k, nk):
+        u = jax.random.uniform(k, (n_pad,))
+        return jnp.argsort(u + 2.0 * (jnp.arange(n_pad) >= nk))
+
+    perm = jax.vmap(draw_order)(keys, n_real)
+    perm = perm.reshape(m, E, n_pad)[:, :, : spe * B].reshape(m, E * spe * B)
+    gather = jax.vmap(lambda rows, p: jnp.take(rows, p, axis=0))
+    bx = gather(xs, perm).reshape((m, E * spe, B) + xs.shape[2:])
+    by = (
+        gather(ys, perm).reshape((m, E * spe, B) + ys.shape[2:])
+        if has_labels
+        else None
+    )
+    # Step s is real iff its epoch-local index is below the client's own
+    # steps_per_epoch; padded steps are masked no-ops in client_update.
+    step_in_epoch = jnp.arange(E * spe, dtype=jnp.int32) % spe
+    mask = (step_in_epoch[None, :] < spe_k[:, None]).astype(jnp.float32)
+    batch = (bx, by) if has_labels else (bx,)
+    return batch, mask, w
+
+
+def _engine_round(
+    loss_fn, params, px, py, counts, spe_arr, ids, key, lr,
+    *, E, spe, B, has_labels, interpret, accum_dtype,
+):
+    batch, mask, w = _assemble_batches(
+        px, py, counts, spe_arr, ids, key, E=E, spe=spe, B=B, has_labels=has_labels
+    )
+    step = build_simulation_round_step(
+        loss_fn, interpret=interpret, accum_dtype=accum_dtype
+    )
+    state, metrics = step(
+        RoundState(params), RoundBatch(batch, mask, w, lr=lr, key=None)
+    )
+    return state.params, metrics["loss"]

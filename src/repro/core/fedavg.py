@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.optim.optimizers import Optimizer, apply_updates, sgd
-from repro.utils.tree import tree_weighted_mean
+from repro.utils.tree import tree_weighted_mean  # noqa: F401 (reference impl)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,22 +80,39 @@ def client_update(
     return params, losses
 
 
-def server_aggregate(stacked_params, client_weights):
-    """w_{t+1} <- sum_k (n_k/n) w^k_{t+1} (weights normalized over S_t)."""
-    return tree_weighted_mean(stacked_params, client_weights)
+def server_aggregate(stacked_params, client_weights, *, interpret=None,
+                     accum_dtype=jnp.float32):
+    """w_{t+1} <- sum_k (n_k/n) w^k_{t+1} — Algorithm 1's server line.
+
+    ``client_weights`` are RAW example counts n_k; this is the ONE place on
+    the hot path where they get normalized (inside the
+    ``tree_fedavg_aggregate`` adapter, whose Pallas kernel asserts the
+    normalized contract). The pure-jnp ``tree_weighted_mean`` remains the
+    reference oracle in tests. ``interpret=None`` auto-selects the Pallas
+    interpreter off-TPU (kernels do not lower on the CPU backend)."""
+    from repro.kernels.ops import default_interpret, tree_fedavg_aggregate
+
+    if interpret is None:
+        interpret = default_interpret()
+    return tree_fedavg_aggregate(
+        stacked_params, client_weights, interpret=interpret,
+        accum_dtype=accum_dtype,
+    )
 
 
-@partial(jax.jit, static_argnums=(0,))
-def fedavg_round(loss_fn, params, batches, step_mask, client_weights, lr):
+@partial(jax.jit, static_argnums=(0,), static_argnames=("interpret",))
+def fedavg_round(loss_fn, params, batches, step_mask, client_weights, lr,
+                 *, interpret=None):
     """One synchronous round over the m sampled clients (vmapped).
 
     batches leaves: (m, n_steps, B, ...); step_mask: (m, n_steps);
-    client_weights: (m,) raw example counts n_k.
-    Returns (new_global_params, mean_train_loss).
+    client_weights: (m,) raw example counts n_k (normalized once, inside
+    ``server_aggregate``). Returns (new_global_params, mean_train_loss).
     """
     upd = jax.vmap(lambda b, msk: client_update(loss_fn, params, b, msk, lr))
     client_params, losses = upd(batches, step_mask)
-    new_params = server_aggregate(client_params, client_weights)
+    new_params = server_aggregate(client_params, client_weights,
+                                  interpret=interpret)
     # Mean loss over real (unmasked) steps, weighted by client size.
     w = client_weights / jnp.sum(client_weights)
     per_client = jnp.sum(losses * step_mask, axis=1) / jnp.maximum(

@@ -100,6 +100,36 @@ def build_fedavg_round_step(
     return round_step
 
 
+def as_round_step(
+    loss_fn: Callable,
+    inner_opt: Optimizer,
+    cfg: LocalSGDConfig,
+    outer_opt: Optional[Optimizer] = None,
+):
+    """Adapt the production round to the unified ``round_step`` protocol
+    (``core.engine.RoundStep``): the same (state, batch) -> (state, metrics)
+    callable the simulation engine exposes, so launch plans, benchmarks and
+    compression hooks target one API.
+
+    ``state.params`` carries the (G, ...) per-group replicas; ``state
+    .inner_state``/``state.outer_state`` the optimizer states. ``batch.data``
+    leaves are (H, G, ...); ``batch.step_mask`` is unused here (local steps
+    are never padded on the mesh path) and ``batch.client_weights`` are raw
+    per-group example counts, normalized once in the weighted average."""
+    from repro.core.engine import RoundBatch, RoundState
+
+    step = build_fedavg_round_step(loss_fn, inner_opt, cfg, outer_opt=outer_opt)
+
+    def round_step(state: "RoundState", rb: "RoundBatch"):
+        params_g, inner_g, outer, metrics = step(
+            state.params, state.inner_state, state.outer_state,
+            rb.data, rb.client_weights,
+        )
+        return RoundState(params_g, inner_g, outer), metrics
+
+    return round_step
+
+
 def build_fedsgd_train_step(loss_fn: Callable, opt: Optimizer):
     """Baseline synchronous step: one global model, per-step gradient sync
     across ALL mesh axes (GSPMD inserts the all-reduce because the batch is

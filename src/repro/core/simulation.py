@@ -1,65 +1,81 @@
-"""Faithful single-host simulation of Algorithm 1 over many virtual clients.
+"""Single-host simulation of Algorithm 1 — now a thin veneer over the
+statically-shaped :class:`repro.core.engine.RoundEngine`.
 
-This is the engine behind the paper-table reproductions: a fixed population of
-K clients (index lists into a backing dataset, or per-client arrays), a
-synchronous round loop with client sampling, vmapped ClientUpdates, and
-weighted server averaging. Ragged clients are padded to a common step count
-with masked (no-op) steps so a single jitted round handles unbalanced data.
+Historically this module owned the round loop: per-round host-side numpy
+batch assembly (``_build_round_batch``) feeding ``fedavg_round`` with
+round-varying shapes. That path re-jitted whenever the sampled cohort's
+``(max_steps, max_b)`` changed and is kept only as
+:func:`build_round_batch_host` — the comparison baseline for
+``benchmarks/round_engine.py`` and equivalence tests. New code should use
+``RoundEngine`` directly; ``FederatedTrainer`` remains as a compatibility
+wrapper with the exact old constructor/``run`` signature (see
+docs/engine.md for migration notes).
+
+``History``/``RoundRecord`` live in ``core.engine`` now and are re-exported
+here unchanged.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fedavg import FedAvgConfig, fedavg_round, sample_clients
+from repro.core.engine import History, RoundEngine, RoundRecord  # noqa: F401
+from repro.core.fedavg import FedAvgConfig
 from repro.data.batching import client_epoch_batches
 
 
-@dataclasses.dataclass
-class RoundRecord:
-    round: int
-    train_loss: float
-    test_acc: Optional[float] = None
-    test_loss: Optional[float] = None
-    wall_s: float = 0.0
+def build_round_batch_host(client_data, selected, cfg: FedAvgConfig, rng):
+    """LEGACY host-side round assembly (numpy padding/tiling per round).
 
-
-@dataclasses.dataclass
-class History:
-    records: List[RoundRecord] = dataclasses.field(default_factory=list)
-
-    def accuracy_curve(self) -> List[Tuple[int, float]]:
-        return [(r.round, r.test_acc) for r in self.records if r.test_acc is not None]
-
-    def rounds_to_target(self, target: float) -> Optional[float]:
-        """Paper's metric: make the curve monotone (best-so-far), then find
-        the first crossing of ``target`` with linear interpolation."""
-        curve = self.accuracy_curve()
-        if not curve:
-            return None
-        best = -np.inf
-        mono = []
-        for rnd, acc in curve:
-            best = max(best, acc)
-            mono.append((rnd, best))
-        prev_r, prev_a = 0, 0.0
-        for rnd, acc in mono:
-            if acc >= target:
-                if acc == prev_a:
-                    return float(rnd)
-                frac = (target - prev_a) / (acc - prev_a)
-                return float(prev_r + frac * (rnd - prev_r))
-            prev_r, prev_a = rnd, acc
-        return None
+    Stacks the E-epoch batch schedules of the selected clients, padded to a
+    common step count with a 0/1 step mask; the ragged batch dim is tiled by
+    within-client resampling. Shapes vary with the sampled cohort, so a
+    jitted consumer recompiles whenever (max_steps, max_b) changes — the
+    exact cost ``RoundEngine`` removes. Kept for the old-vs-new benchmark
+    and as an independent reference for equivalence tests.
+    """
+    stacks = []
+    for k in selected:
+        x_k, y_k = client_data[int(k)]
+        bx, by = client_epoch_batches(
+            x_k, y_k, cfg.B, cfg.E, seed=int(rng.integers(2**31))
+        )
+        stacks.append((bx, by))
+    max_steps = max(s[0].shape[0] for s in stacks)
+    # B=inf => per-client full-batch sizes differ; pad batch dim too.
+    max_b = max(s[0].shape[1] for s in stacks)
+    m = len(stacks)
+    bx0, by0 = stacks[0]
+    bxs = np.zeros((m, max_steps, max_b) + bx0.shape[2:], bx0.dtype)
+    bys = (
+        np.zeros((m, max_steps, max_b) + by0.shape[2:], by0.dtype)
+        if by0 is not None
+        else None
+    )
+    mask = np.zeros((m, max_steps), np.float32)
+    weights = np.zeros((m,), np.float32)
+    for i, (bx, by) in enumerate(stacks):
+        s, b = bx.shape[:2]
+        reps = -(-max_b // b)
+        bx_t = np.concatenate([bx] * reps, axis=1)[:, :max_b]
+        bxs[i, :s] = bx_t
+        if bys is not None:
+            by_t = np.concatenate([by] * reps, axis=1)[:, :max_b]
+            bys[i, :s] = by_t
+        mask[i, :s] = 1.0
+        weights[i] = len(client_data[int(selected[i])][0])
+    return bxs, bys, mask, weights
 
 
 class FederatedTrainer:
-    """Runs Algorithm 1 on per-client (x, y) numpy arrays."""
+    """Compatibility wrapper: the old trainer API, engine-backed.
+
+    Construction packs the client population once and compiles a single
+    round executable (see ``RoundEngine``); ``run``/``history``/``params``
+    behave exactly as before."""
 
     def __init__(
         self,
@@ -69,61 +85,34 @@ class FederatedTrainer:
         cfg: FedAvgConfig,
         eval_fn: Optional[Callable] = None,
     ):
+        self.engine = RoundEngine(loss_fn, init_params, client_data, cfg, eval_fn)
         self.loss_fn = loss_fn
-        self.params = init_params
         self.client_data = list(client_data)
         self.cfg = cfg
         self.eval_fn = eval_fn
-        self.rng = np.random.default_rng(cfg.seed)
-        self.round_idx = 0
-        self.history = History()
+
+    @property
+    def params(self):
+        return self.engine.params
+
+    @params.setter
+    def params(self, value):
+        self.engine.params = value
+
+    @property
+    def history(self) -> History:
+        return self.engine.history
+
+    @property
+    def round_idx(self) -> int:
+        return self.engine.round_idx
 
     @property
     def num_clients(self) -> int:
-        return len(self.client_data)
-
-    def _build_round_batch(self, selected: np.ndarray):
-        """Stack the E-epoch batch schedules of the selected clients, padded
-        to a common step count with a 0/1 step mask."""
-        cfg = self.cfg
-        stacks = []
-        for k in selected:
-            x_k, y_k = self.client_data[int(k)]
-            bx, by = client_epoch_batches(
-                x_k, y_k, cfg.B, cfg.E, seed=int(self.rng.integers(2**31))
-            )
-            stacks.append((bx, by))
-        max_steps = max(s[0].shape[0] for s in stacks)
-        # B=inf => per-client full-batch sizes differ; pad batch dim too.
-        max_b = max(s[0].shape[1] for s in stacks)
-        m = len(stacks)
-        bx0, by0 = stacks[0]
-        bxs = np.zeros((m, max_steps, max_b) + bx0.shape[2:], bx0.dtype)
-        bys = (
-            np.zeros((m, max_steps, max_b) + by0.shape[2:], by0.dtype)
-            if by0 is not None
-            else None
-        )
-        mask = np.zeros((m, max_steps), np.float32)
-        weights = np.zeros((m,), np.float32)
-        for i, (bx, by) in enumerate(stacks):
-            s, b = bx.shape[:2]
-            # Tile ragged batch dim by resampling (gradient of mean loss over
-            # a tiled batch == over the original batch when b divides max_b;
-            # otherwise a within-client bootstrap — standard padding).
-            reps = -(-max_b // b)
-            bx_t = np.concatenate([bx] * reps, axis=1)[:, :max_b]
-            bxs[i, :s] = bx_t
-            if bys is not None:
-                by_t = np.concatenate([by] * reps, axis=1)[:, :max_b]
-                bys[i, :s] = by_t
-            mask[i, :s] = 1.0
-            weights[i] = len(self.client_data[int(selected[i])][0])
-        return bxs, bys, mask, weights
+        return self.engine.num_clients
 
     def lr_at(self, rnd: int) -> float:
-        lr = self.cfg.lr(rnd) if callable(self.cfg.lr) else self.cfg.lr
-        return float(lr) * self.cfg.lr_decay**rnd
+        return self.engine.lr_at(rnd)
 
     def run(
         self,
@@ -132,44 +121,9 @@ class FederatedTrainer:
         target_acc: Optional[float] = None,
         verbose: bool = False,
     ) -> History:
-        for _ in range(n_rounds):
-            t0 = time.time()
-            selected = sample_clients(self.rng, self.num_clients, self.cfg.C)
-            bx, by, mask, weights = self._build_round_batch(selected)
-            batch = (jnp.asarray(bx), jnp.asarray(by)) if by is not None else (
-                jnp.asarray(bx),
-            )
-            self.params, loss = fedavg_round(
-                self.loss_fn,
-                self.params,
-                batch,
-                jnp.asarray(mask),
-                jnp.asarray(weights),
-                self.lr_at(self.round_idx),
-            )
-            self.round_idx += 1
-            rec = RoundRecord(
-                round=self.round_idx,
-                train_loss=float(loss),
-                wall_s=time.time() - t0,
-            )
-            if self.eval_fn is not None and (
-                self.round_idx % eval_every == 0 or self.round_idx == n_rounds
-            ):
-                metrics = self.eval_fn(self.params)
-                rec.test_acc = float(metrics["acc"])
-                rec.test_loss = float(metrics.get("loss", np.nan))
-                if verbose:
-                    print(
-                        f"round {self.round_idx:5d} loss {rec.train_loss:.4f} "
-                        f"test_acc {rec.test_acc:.4f}"
-                    )
-                self.history.records.append(rec)
-                if target_acc is not None and rec.test_acc >= target_acc:
-                    break
-            else:
-                self.history.records.append(rec)
-        return self.history
+        return self.engine.run(
+            n_rounds, eval_every=eval_every, target_acc=target_acc, verbose=verbose
+        )
 
 
 def make_eval_fn(apply_fn, x_test, y_test, batch_size: int = 512):
@@ -179,8 +133,11 @@ def make_eval_fn(apply_fn, x_test, y_test, batch_size: int = 512):
     n = len(x_test)
     n_batches = -(-n // batch_size)
     pad = n_batches * batch_size - n
-    xp = np.concatenate([x_test, x_test[:pad]]) if pad else x_test
-    yp = np.concatenate([y_test, y_test[:pad]]) if pad else y_test
+    # Modular fill: x_test[:pad] under-fills when pad > n (tiny test sets);
+    # the padded rows are masked out below, so content is irrelevant.
+    fill = np.arange(pad) % n
+    xp = np.concatenate([x_test, x_test[fill]]) if pad else x_test
+    yp = np.concatenate([y_test, y_test[fill]]) if pad else y_test
     xb = jnp.asarray(xp.reshape((n_batches, batch_size) + x_test.shape[1:]))
     yb = jnp.asarray(yp.reshape((n_batches, batch_size) + y_test.shape[1:]))
     valid = np.ones(n_batches * batch_size, np.float32)

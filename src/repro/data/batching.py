@@ -12,7 +12,7 @@ weights n_k used by the server are unaffected).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -43,6 +43,134 @@ def client_epoch_batches(
     bx = np.stack(xs)
     by = np.stack(ys) if y is not None else None
     return bx, by
+
+
+class PackedClients(NamedTuple):
+    """Device-ready, statically-shaped packing of a whole client population.
+
+    Produced once by :func:`pack_clients`; consumed every round by
+    ``core.engine.RoundEngine`` via a pure on-device gather (no per-round
+    host work, one compiled executable for the whole run).
+
+    x / y:            (K, n_pad, ...) — every client's examples, tiled to the
+                      common row budget ``n_pad`` (see bias note below).
+    counts:           (K,) float32 — RAW example counts n_k. These are the
+                      server weights; padding never changes them.
+    steps_per_epoch:  (K,) int32 — the client's REAL optimizer steps per
+                      epoch, max(n_k // B, 1); steps beyond this are masked
+                      no-ops in the engine.
+    batch_size:       static per-step batch size B (== n_pad for B=None).
+    max_steps_per_epoch: static spe = n_pad // batch_size; the padded epoch
+                      length every client shares.
+    bucket_sizes:     sorted distinct per-client row budgets (power-of-two
+                      multiples of B) — DIAGNOSTIC shape classes for
+                      padding/overhead accounting and tests; masking is
+                      driven by ``steps_per_epoch`` alone. Storage uses one
+                      common pool of ceil(max n_k / B) * B rows so a single
+                      gather has one shape.
+    bucket_of:        (K,) host int array — bucket index per client.
+
+    Bootstrap-tiling bias (moved here from the old host-side
+    ``FederatedTrainer._build_round_batch``): a client with n_k examples is
+    tiled as ``x[i % n_k]`` up to ``n_pad`` rows. The engine's draw order
+    always places a fresh permutation of the n_k REAL rows first, so
+    active steps sample without replacement and tiled duplicates are only
+    ever drawn to FILL a batch: when n_k < B (the whole pool pads one
+    batch) or B=None with unequal client sizes (full-batch tiling). In
+    those cases early examples can appear once more than late ones — a
+    within-client bootstrap, the standard simulation padding, identical in
+    class to the legacy host path's resample fill. Server weights use the
+    raw n_k, so the aggregate stays correctly weighted.
+    """
+
+    x: np.ndarray
+    y: Optional[np.ndarray]
+    counts: np.ndarray
+    steps_per_epoch: np.ndarray
+    batch_size: int
+    max_steps_per_epoch: int
+    bucket_sizes: Tuple[int, ...]
+    bucket_of: np.ndarray
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.counts)
+
+    @property
+    def max_real_steps_per_epoch(self) -> int:
+        """Largest per-client REAL step count — the scan length the engine
+        actually needs. ``max_steps_per_epoch`` (= n_pad // B) can exceed it
+        by one when n_max is not a step multiple: the pool keeps ceil rows
+        so no example is truncated, but scanning that extra step would be a
+        masked no-op for every client."""
+        return int(self.steps_per_epoch.max())
+
+    def overhead(self) -> float:
+        """Padded rows stored per real example (1.0 == no padding).
+        Derived from metadata only, so it works on the stripped pack
+        RoundEngine keeps after uploading the arrays to device."""
+        n_pad = self.max_steps_per_epoch * self.batch_size
+        return float(self.num_clients * n_pad / self.counts.sum())
+
+
+def _next_pow2(v: int) -> int:
+    return 1 << (int(v) - 1).bit_length() if v > 0 else 1
+
+
+def pack_clients(
+    client_data: Sequence[Tuple[np.ndarray, Optional[np.ndarray]]],
+    batch_size: Optional[int],
+) -> PackedClients:
+    """Pack per-client (x, y) arrays into one statically-shaped population.
+
+    Shape-bucket scheme: each client's per-epoch step count
+    max(n_k // B, 1) is rounded up to the next power of two, giving a small
+    set of diagnostic shape classes. Storage uses one common pool of
+    ceil(max n_k / B) * B rows so one executable serves every sampled
+    cohort; per-client real step counts ride along for masking. For B=None
+    (FedSGD's full batch) there is a single bucket: n_pad = max n_k and one
+    step per epoch over the whole pool.
+    """
+    if not len(client_data):
+        raise ValueError("pack_clients needs at least one client")
+    counts = np.asarray([len(x) for x, _ in client_data], np.int64)
+    if batch_size is None:
+        steps = np.ones(len(counts), np.int32)
+        B = int(counts.max())
+        buckets = np.zeros(len(counts), np.int64)
+        bucket_sizes = (B,)
+        n_pad = B
+    else:
+        B = int(batch_size)
+        steps = np.maximum(counts // B, 1).astype(np.int32)
+        step_buckets = np.asarray([_next_pow2(int(s)) for s in steps], np.int64)
+        bucket_sizes = tuple(sorted(set(int(b) * B for b in step_buckets)))
+        buckets = np.searchsorted(np.asarray(bucket_sizes), step_buckets * B)
+        # The shared pool must hold EVERY example of the largest client
+        # (ceil, not floor — a floor-based budget would silently truncate
+        # clients whose n_k is not a step multiple). No pow2 rounding here:
+        # the pool shape is fixed at pack time either way, and every padded
+        # step costs real (masked) compute.
+        n_pad = int(np.ceil(counts.max() / B)) * B
+    x0, y0 = client_data[0]
+    K = len(client_data)
+    xs = np.zeros((K, n_pad) + x0.shape[1:], x0.dtype)
+    ys = np.zeros((K, n_pad) + y0.shape[1:], y0.dtype) if y0 is not None else None
+    for k, (x, y) in enumerate(client_data):
+        idx = np.arange(n_pad) % len(x)
+        xs[k] = x[idx]
+        if ys is not None:
+            ys[k] = y[idx]
+    return PackedClients(
+        x=xs,
+        y=ys,
+        counts=counts.astype(np.float32),
+        steps_per_epoch=steps,
+        batch_size=B,
+        max_steps_per_epoch=n_pad // B,
+        bucket_sizes=bucket_sizes,
+        bucket_of=buckets.astype(np.int64),
+    )
 
 
 def batch_iterator(x, y, batch_size, seed=0, drop_last=True):

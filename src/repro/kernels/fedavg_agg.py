@@ -2,11 +2,24 @@
 ``w <- sum_k (n_k/n) w_k``) — the per-round hot loop of the paper.
 
 The K client models arrive stacked as (K, N) over the flattened parameter
-vector; weights (K,) are pre-normalized by ops.py. The kernel tiles N into
-VMEM-sized blocks (grid dim 1) and reduces over K in VMEM with a float32
-accumulator regardless of the storage dtype — averaging bf16 client deltas
-in bf16 loses ~3 decimal digits per 2x clients, which materially hurts
-FedAvg convergence (ops.py exposes the accumulation dtype for tests).
+vector; weights (K,) are **pre-normalized to sum to 1**. Normalization
+happens in exactly one place — ``repro.core.fedavg.server_aggregate`` (and
+its pytree adapter ``repro.kernels.ops.tree_fedavg_aggregate``), which is
+the only sanctioned entry point for raw example counts n_k. This module
+asserts the contract on concrete (non-traced) weights and documents it for
+traced ones, where a value check is impossible.
+
+The kernel tiles N into VMEM-sized blocks (grid dim 1) and reduces over K
+in VMEM with an ``accum_dtype`` accumulator (float32 by default) regardless
+of the storage dtype — averaging bf16 client deltas in bf16 loses ~3
+decimal digits per 2x clients, which materially hurts FedAvg convergence.
+``accum_dtype`` is exposed (and threaded through ``ops.py``) so tests can
+demonstrate exactly that precision cliff; production code should leave the
+default.
+
+``interpret=True`` executes the kernel body in Python via the Pallas
+interpreter — the CPU-test fallback (Pallas does not lower on the CPU SPMD
+backend). On real TPU hardware leave ``interpret=False``.
 
 On a pod this same kernel implements the local all-reduce combiner; across
 pods the mesh all-reduce handles the final combine (see core/local_sgd.py).
@@ -20,21 +33,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _agg_kernel(w_ref, params_ref, o_ref):
+def _agg_kernel(w_ref, params_ref, o_ref, *, accum_dtype):
     # params_ref: (K, block_n); w_ref: (K, 1) in SMEM-friendly layout.
-    p = params_ref[...].astype(jnp.float32)          # (K, bn)
-    w = w_ref[...].astype(jnp.float32)               # (K, 1)
+    p = params_ref[...].astype(accum_dtype)          # (K, bn)
+    w = w_ref[...].astype(accum_dtype)               # (K, 1)
     o_ref[...] = jnp.sum(p * w, axis=0, keepdims=True).astype(o_ref.dtype)[0]
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def fedavg_aggregate(
-    stacked: jnp.ndarray,   # (K, N) flattened client parameters
-    weights: jnp.ndarray,   # (K,) normalized (sum to 1)
-    *,
-    block_n: int = 16384,
-    interpret: bool = False,
-) -> jnp.ndarray:
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "interpret", "accum_dtype")
+)
+def _aggregate_impl(stacked, weights, *, block_n, interpret, accum_dtype):
     K, N = stacked.shape
     block_n = min(block_n, N)
     pad = (-N) % block_n
@@ -43,7 +52,7 @@ def fedavg_aggregate(
     nb = stacked.shape[1] // block_n
     w2 = weights.reshape(K, 1).astype(jnp.float32)
     out = pl.pallas_call(
-        _agg_kernel,
+        functools.partial(_agg_kernel, accum_dtype=accum_dtype),
         grid=(nb,),
         in_specs=[
             pl.BlockSpec((K, 1), lambda i: (0, 0)),
@@ -54,3 +63,35 @@ def fedavg_aggregate(
         interpret=interpret,
     )(w2, stacked)
     return out[:N]
+
+
+def fedavg_aggregate(
+    stacked: jnp.ndarray,   # (K, N) flattened client parameters
+    weights: jnp.ndarray,   # (K,) normalized (sum to 1) — see module docstring
+    *,
+    block_n: int = 16384,
+    interpret: bool = False,
+    accum_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Weighted sum over the client axis: (K, N), (K,) -> (N,).
+
+    Contract: ``weights`` must already sum to 1 (normalize raw n_k in
+    ``server_aggregate``, nowhere else). Checked eagerly when ``weights``
+    is concrete; under a surrounding jit trace the check is skipped and the
+    caller's contract applies.
+    """
+    if not isinstance(weights, jax.core.Tracer):
+        s = float(jnp.sum(jnp.asarray(weights, jnp.float32)))
+        if abs(s - 1.0) > 1e-3:
+            raise ValueError(
+                "fedavg_aggregate requires pre-normalized weights (sum==1); "
+                f"got sum={s:.6f}. Pass raw counts to server_aggregate / "
+                "tree_fedavg_aggregate instead — normalization lives there."
+            )
+    return _aggregate_impl(
+        stacked,
+        weights,
+        block_n=block_n,
+        interpret=interpret,
+        accum_dtype=jnp.dtype(accum_dtype),
+    )

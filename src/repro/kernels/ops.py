@@ -16,6 +16,14 @@ from repro.kernels.ce_loss import fused_cross_entropy
 from repro.kernels.fedavg_agg import fedavg_aggregate
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssm_scan import ssm_scan
+from repro.utils.tree import tree_ravel_stacked, tree_unravel
+
+
+def default_interpret() -> bool:
+    """Single home for the backend policy: Pallas kernels only lower on
+    TPU; everywhere else run the kernel body in the Pallas interpreter
+    (slow but exact — the CPU test path)."""
+    return jax.default_backend() != "tpu"
 
 
 def mha_flash(q, k, v, *, causal=True, window=0, block_q=128, block_k=128,
@@ -34,20 +42,25 @@ def mha_flash(q, k, v, *, causal=True, window=0, block_q=128, block_k=128,
     return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
 
 
-def tree_fedavg_aggregate(stacked_params, weights, *, interpret=False):
+def tree_fedavg_aggregate(stacked_params, weights, *, interpret=False,
+                          accum_dtype=jnp.float32, block_n=None):
     """Weighted-average a pytree whose leaves are (K, ...) stacked client
-    params — Algorithm 1's server line, flattened through the Pallas kernel."""
-    leaves, treedef = jax.tree.flatten(stacked_params)
-    K = leaves[0].shape[0]
-    flat = jnp.concatenate([l.reshape(K, -1) for l in leaves], axis=1)
-    w = weights / jnp.sum(weights)
-    avg = fedavg_aggregate(flat, w, interpret=interpret)
-    out, off = [], 0
-    for l in leaves:
-        n = int(l[0].size)
-        out.append(avg[off : off + n].reshape(l.shape[1:]).astype(l.dtype))
-        off += n
-    return jax.tree.unflatten(treedef, out)
+    params — Algorithm 1's server line, flattened through the Pallas kernel.
+
+    ``weights`` are RAW example counts n_k; this adapter is the single place
+    on the kernel path that normalizes them to sum to 1 (the kernel asserts
+    that contract). ``accum_dtype`` is the in-kernel reduction dtype — fp32
+    by default regardless of storage dtype (see kernels/fedavg_agg.py)."""
+    if block_n is None:
+        # 16k columns fits VMEM on hardware; the Python interpreter has no
+        # VMEM and pays per grid cell, so use far fewer, larger blocks there.
+        block_n = (1 << 20) if interpret else 16384
+    flat, spec = tree_ravel_stacked(stacked_params)
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+    avg = fedavg_aggregate(flat, w, interpret=interpret,
+                           accum_dtype=accum_dtype, block_n=block_n)
+    return tree_unravel(spec, avg)
 
 
 def mamba_ssm_scan(dt, Bm, Cm, x, A, h0, *, chunk=0, interpret=False):

@@ -24,9 +24,10 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core.engine import RoundBatch, RoundState
 from repro.core.local_sgd import (
     LocalSGDConfig,
-    build_fedavg_round_step,
+    as_round_step,
     build_fedsgd_train_step,
     replicate_for_groups,
 )
@@ -150,7 +151,9 @@ def build_plan(
             assert multi_pod, "fedavg round step shards clients over the pod axis"
             G = mesh.shape["pod"]
             ls_cfg = LocalSGDConfig(num_groups=G, local_steps=local_steps)
-            round_step = build_fedavg_round_step(loss_zero3, opt, ls_cfg)
+            # Unified round_step protocol (core.engine): same call shape as
+            # the simulation engine, so the plan is backend-agnostic.
+            round_step = as_round_step(loss_zero3, opt, ls_cfg)
             params_g = jax.tree.map(
                 lambda l: sds((G,) + l.shape, l.dtype), params_shapes
             )
@@ -171,8 +174,11 @@ def build_plan(
             weights = sds((G,), jnp.float32)
 
             def fn(params_g, opt_g, batches, w):
-                pg, og, _, metrics = round_step(params_g, opt_g, None, batches, w)
-                return pg, og, metrics["loss"]
+                state, metrics = round_step(
+                    RoundState(params_g, opt_g, None),
+                    RoundBatch(batches, None, w),
+                )
+                return state.params, state.inner_state, metrics["loss"]
 
             return LoweringPlan(
                 fn=fn,

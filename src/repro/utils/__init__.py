@@ -1,9 +1,13 @@
 from repro.utils.tree import (
+    TreeSpec,
     tree_add,
+    tree_cast,
+    tree_l2_norm,
+    tree_ravel,
+    tree_ravel_stacked,
     tree_scale,
+    tree_size,
+    tree_unravel,
     tree_weighted_mean,
     tree_zeros_like,
-    tree_size,
-    tree_l2_norm,
-    tree_cast,
 )

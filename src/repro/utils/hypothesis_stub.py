@@ -1,0 +1,90 @@
+"""Minimal, deterministic stand-in for the ``hypothesis`` library.
+
+The test suite uses a small slice of hypothesis (``@given`` over
+``integers``/``floats``/``booleans``/``sampled_from`` plus ``@settings``),
+but the pinned container image does not ship the package and the repo policy
+is to stub missing deps rather than install them. ``tests/conftest.py``
+registers this module under ``sys.modules["hypothesis"]`` ONLY when the real
+library is absent, so environments that do have hypothesis keep its full
+shrinking/fuzzing behaviour.
+
+Differences from real hypothesis, by design:
+- draws are a fixed-seed pseudo-random sweep (no shrinking, no database);
+- ``deadline``/profiles are accepted and ignored;
+- the first example of every integer/float strategy pins both endpoints so
+  boundary cases are always exercised.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+
+
+class _Strategy:
+    def __init__(self, draw, boundaries=()):
+        self._draw = draw
+        self._boundaries = tuple(boundaries)
+
+    def example_at(self, rng: random.Random, i: int):
+        if i < len(self._boundaries):
+            return self._boundaries[i]
+        return self._draw(rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` for the used subset."""
+
+    @staticmethod
+    def integers(min_value=0, max_value=2**31 - 1):
+        return _Strategy(
+            lambda r: r.randint(min_value, max_value), (min_value, max_value)
+        )
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(
+            lambda r: r.uniform(min_value, max_value), (min_value, max_value)
+        )
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda r: bool(r.getrandbits(1)), (False, True))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: r.choice(elements))
+
+
+class settings:
+    """Decorator form only: ``@settings(max_examples=N, deadline=None)``."""
+
+    def __init__(self, max_examples: int = 20, deadline=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_max_examples = self.max_examples
+        return fn
+
+
+def given(**strats):
+    def decorate(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", 20)
+            rng = random.Random(0xFEDAB6)
+            for i in range(n):
+                drawn = {k: s.example_at(rng, i) for k, s in strats.items()}
+                fn(*args, **{**kwargs, **drawn})
+
+        # Hide the strategy-filled parameters from pytest's fixture
+        # resolution, exactly as real hypothesis does.
+        sig = inspect.signature(fn)
+        remaining = [p for name, p in sig.parameters.items() if name not in strats]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._stub_max_examples = getattr(fn, "_stub_max_examples", 20)
+        return wrapper
+
+    return decorate

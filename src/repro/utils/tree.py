@@ -5,6 +5,8 @@ All model parameters, optimizer states and client updates are plain pytrees
 """
 from __future__ import annotations
 
+from typing import Any, NamedTuple, Tuple
+
 import jax
 import jax.numpy as jnp
 
@@ -40,6 +42,84 @@ def tree_weighted_mean(stacked, weights):
         return jnp.sum(leaf * w, axis=0)
 
     return jax.tree.map(avg, stacked)
+
+
+class TreeSpec(NamedTuple):
+    """Static recipe for rebuilding a pytree from its raveled vector.
+
+    Produced by ``tree_ravel``/``tree_ravel_stacked``; consumed by
+    ``tree_unravel``. Hashable/static, so it can close over a jitted
+    function without forcing retraces.
+    """
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+
+    @property
+    def sizes(self) -> Tuple[int, ...]:
+        out = []
+        for s in self.shapes:
+            n = 1
+            for d in s:
+                n *= d
+            out.append(n)
+        return tuple(out)
+
+    @property
+    def total_size(self) -> int:
+        return sum(self.sizes)
+
+
+def tree_ravel(tree):
+    """Flatten a pytree of arrays into one 1-D vector.
+
+    Returns ``(flat, spec)`` where ``flat`` has shape (N,) with N the total
+    parameter count and ``spec`` is the static :class:`TreeSpec` that
+    ``tree_unravel`` needs to invert the operation. Leaves are concatenated
+    in ``jax.tree.flatten`` order and cast to a common dtype only if they
+    disagree (result dtype: the promotion of all leaf dtypes).
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    spec = TreeSpec(
+        treedef,
+        tuple(tuple(l.shape) for l in leaves),
+        tuple(jnp.dtype(l.dtype) for l in leaves),
+    )
+    flat = jnp.concatenate([jnp.ravel(l) for l in leaves]) if leaves else jnp.zeros((0,))
+    return flat, spec
+
+
+def tree_unravel(spec: TreeSpec, flat):
+    """Inverse of ``tree_ravel``: (N,) vector -> pytree per ``spec``.
+
+    Each leaf is reshaped to its recorded shape and cast back to its
+    recorded dtype (so a float32 compute on the raveled vector round-trips
+    bf16 storage leaves)."""
+    out, off = [], 0
+    for shape, dtype, n in zip(spec.shapes, spec.dtypes, spec.sizes):
+        out.append(flat[off : off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree.unflatten(spec.treedef, out)
+
+
+def tree_ravel_stacked(stacked):
+    """Ravel a pytree whose leaves carry a leading stack axis (K, ...).
+
+    Returns ``(flat, spec)`` with ``flat`` of shape (K, N) — one row per
+    stacked slice — and ``spec`` describing the UNSTACKED tree, so
+    ``tree_unravel(spec, flat[k])`` (or the aggregated row) rebuilds a
+    single-model pytree. This is the adapter between model pytrees and the
+    (K, N) layout of the Pallas ``fedavg_aggregate`` kernel."""
+    leaves, treedef = jax.tree.flatten(stacked)
+    K = leaves[0].shape[0]
+    spec = TreeSpec(
+        treedef,
+        tuple(tuple(l.shape[1:]) for l in leaves),
+        tuple(jnp.dtype(l.dtype) for l in leaves),
+    )
+    flat = jnp.concatenate([l.reshape(K, -1) for l in leaves], axis=1)
+    return flat, spec
 
 
 def tree_size(a) -> int:

@@ -124,7 +124,10 @@ MINI_DRYRUN = textwrap.dedent("""
                 in_shardings=named(mesh, plan.in_shardings),
                 out_shardings=named(mesh, plan.out_shardings),
             ).lower(*plan.args).compile()
-        out[f"{shape}:{algo}"] = compiled.cost_analysis().get("flops", -1) > 0
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):  # jax<=0.4.x: one dict per computation
+            ca = ca[0] if ca else {}
+        out[f"{shape}:{algo}"] = ca.get("flops", -1) > 0
     print(json.dumps(out))
 """)
 

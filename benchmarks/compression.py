@@ -1,0 +1,142 @@
+"""Compressed-upload round: legacy Python-loop codec path vs the compiled
+vmapped pipeline, plus the paper's REAL communication tradeoff — upload
+bytes per round vs rounds-to-target — which FedAvg (fewer rounds) and the
+codecs (fewer bytes per round) multiply together.
+
+What each side of the wall-clock comparison pays per round at m clients:
+
+  loop      m eager ClientUpdate scans dispatched from Python, m per-client
+            encode/decode calls, host-side stacking of the decoded deltas
+            (the pre-PR-2 shape of ``core.compression``);
+  compiled  one jitted executable: vmapped ClientUpdate -> vmapped encode
+            -> fused decode+aggregate (the quantize codec's Pallas
+            ``quantized_aggregate`` kernel, fp32 accumulation).
+
+Emits CSV rows (``name,us_per_call,derived``):
+
+  compression/wallclock/*        per-round seconds and the speedup row —
+                                 the acceptance gate is >=5x at m=50;
+  compression/tradeoff/<codec>   upload KB/client/round (static
+                                 ``wire_bytes``), rounds-to-target, and
+                                 total upload KB to target.
+
+    PYTHONPATH=src python -m benchmarks.run --only compression
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import FedAvgConfig, RoundEngine, make_eval_fn
+from repro.core.compression import (
+    build_compressed_round_step,
+    build_compressed_round_step_loop,
+    identity_codec,
+    mask_codec,
+    quantize_codec,
+    wire_bytes,
+)
+from repro.core.engine import RoundBatch, RoundState
+from repro.data import make_image_classification, partition_unbalanced
+from repro.models import mnist_2nn
+
+
+def _population(n_train, n_clients, seed=5):
+    train, test, _ = make_image_classification(n_train, max(n_train // 5, 50),
+                                               seed=seed, difficulty=2.5)
+    fed = partition_unbalanced(len(train.x), n_clients, seed=0)
+    clients = [
+        (train.x[ix].reshape(len(ix), -1), train.y[ix])
+        for ix in fed.client_indices
+    ]
+    return clients, train, test
+
+
+def bench_wallclock(quick: bool) -> None:
+    """Legacy loop vs compiled pipeline on the SAME materialized batches.
+
+    m=50 simulated clients (the acceptance scale): C=1.0 over a 50-client
+    unbalanced population, 8-bit quantized uploads.
+    """
+    m = 50
+    model = mnist_2nn()
+    clients, _, _ = _population(n_train=1000 if quick else 5000, n_clients=m)
+    params = model.init(jax.random.PRNGKey(0))
+    cfg = FedAvgConfig(C=1.0, E=1, B=10, lr=0.1, seed=0)
+    codec = quantize_codec(8)
+    eng = RoundEngine(model.loss, params, clients, cfg, codec=codec)
+    ids, key, lr = eng._next_round_inputs()
+    batch, mask, w = eng.materialize_round_batch(ids, key)
+    rb = RoundBatch(batch, mask, w, lr=lr, key=jax.random.fold_in(key, 1))
+    state = RoundState(params)
+
+    loop_step = build_compressed_round_step_loop(model.loss, codec)
+    jit_step = jax.jit(build_compressed_round_step(model.loss, codec))
+
+    # Warm both paths outside the timed region (the loop path has no single
+    # executable to warm, but its per-client jits fill their caches).
+    jax.block_until_ready(jit_step(state, rb)[1]["loss"])
+    jax.block_until_ready(loop_step(state, rb)[1]["loss"])
+
+    rounds_loop = 2 if quick else 5
+    t0 = time.perf_counter()
+    for _ in range(rounds_loop):
+        jax.block_until_ready(loop_step(state, rb)[1]["loss"])
+    t_loop = (time.perf_counter() - t0) / rounds_loop
+
+    rounds_jit = 10 if quick else 30
+    t0 = time.perf_counter()
+    for _ in range(rounds_jit):
+        jax.block_until_ready(jit_step(state, rb)[1]["loss"])
+    t_jit = (time.perf_counter() - t0) / rounds_jit
+
+    emit("compression/wallclock/legacy_python_loop", t_loop * 1e6, f"m={m}")
+    emit("compression/wallclock/compiled_pipeline", t_jit * 1e6,
+         f"m={m},compilations={jit_step._cache_size()}")
+    emit("compression/wallclock/speedup", 0.0,
+         f"{t_loop / max(t_jit, 1e-12):.2f}x")
+
+
+def bench_tradeoff(quick: bool) -> None:
+    """Upload bytes vs rounds-to-target across the codec grid."""
+    model = mnist_2nn()
+    clients, train, test = _population(
+        n_train=2000 if quick else 8000, n_clients=20 if quick else 50
+    )
+    params = model.init(jax.random.PRNGKey(0))
+    cfg = FedAvgConfig(C=0.5, E=5, B=10, lr=0.15, seed=0)
+    target = 0.80
+    rounds = 15 if quick else 60
+    ev = make_eval_fn(model.apply, test.x.reshape(len(test.x), -1), test.y)
+    # identity_codec IS the dense-fp32 baseline (proven equivalent to
+    # codec=None round-for-round by tests/test_compression.py), so the grid
+    # trains it once instead of paying a duplicate run for both labels.
+    grid = [
+        ("dense_fp32", identity_codec()),
+        ("q8", quantize_codec(8)),
+        ("q4", quantize_codec(4)),
+        ("mask0.1", mask_codec(0.1)),
+    ]
+    for name, codec in grid:
+        eng = RoundEngine(model.loss, params, clients, cfg, eval_fn=ev,
+                          codec=codec)
+        h = eng.run(rounds, eval_every=1, target_acc=target)
+        r = h.rounds_to_target(target)
+        kb = wire_bytes(codec, params) / 1024
+        total = f"{kb * r:.0f}" if r is not None else "n/a"
+        emit(f"compression/tradeoff/{name}", 0.0,
+             f"kb_per_client_round={kb:.1f};rounds_to_{target:g}={r};"
+             f"kb_to_target={total}")
+
+
+def main(quick: bool = True) -> None:
+    bench_wallclock(quick)
+    bench_tradeoff(quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@ import time
 import traceback
 
 from benchmarks import (
+    compression,
     fig1_averaging,
     fig3_large_E,
     kernels_bench,
@@ -34,6 +35,7 @@ SUITES = {
     "kernels": kernels_bench.main,
     "roofline": roofline_report.main,
     "round_engine": round_engine.main,
+    "compression": compression.main,
 }
 
 

@@ -37,6 +37,11 @@ def main():
     ap.add_argument("--n-train", type=int, default=20000)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument(
+        "--codec", choices=["none", "q8", "q4", "mask", "topk"], default="none",
+        help="client-upload compression (docs/compression.md); traces into "
+             "the same single round executable",
+    )
     args = ap.parse_args()
 
     train, test, _ = make_image_classification(
@@ -60,11 +65,31 @@ def main():
     cfg = FedAvgConfig(C=args.C, E=args.E, B=B, lr=args.lr, seed=args.seed)
     xt = test.x.reshape(len(test.x), -1) if flatten else test.x
     ev = make_eval_fn(model.apply, xt, test.y)
-    tr = RoundEngine(model.loss, params, clients, cfg, eval_fn=ev)
+    from repro.core import (
+        identity_codec,
+        mask_codec,
+        quantize_codec,
+        topk_codec,
+        wire_bytes,
+    )
+
+    codec = {
+        "none": None,
+        "q8": quantize_codec(8),
+        "q4": quantize_codec(4),
+        "mask": mask_codec(0.1),
+        "topk": topk_codec(0.05),
+    }[args.codec]
+    tr = RoundEngine(model.loss, params, clients, cfg, eval_fn=ev, codec=codec)
     hist = tr.run(args.rounds, eval_every=1, target_acc=args.target, verbose=True)
     r = hist.rounds_to_target(args.target)
     u = cfg.expected_updates_per_round(len(train.x), args.clients)
     print(f"\nu={u:.0f} updates/client/round; rounds to {args.target:.0%}: {r}")
+    if codec is not None:
+        kb = wire_bytes(codec, params) / 1024
+        dense_kb = wire_bytes(identity_codec(), params) / 1024
+        print(f"codec={codec.name}: {kb:.1f} KB uploaded/client/round "
+              f"(dense fp32: {dense_kb:.1f} KB)")
     if args.checkpoint_dir:
         from repro.checkpoint import save_checkpoint
 

@@ -14,6 +14,15 @@ from repro.core.engine import (
     RoundStep,
     build_simulation_round_step,
 )
+from repro.core.compression import (
+    Codec,
+    build_compressed_round_step,
+    identity_codec,
+    mask_codec,
+    quantize_codec,
+    topk_codec,
+    wire_bytes,
+)
 from repro.core.simulation import FederatedTrainer, build_round_batch_host, make_eval_fn
 from repro.core.losses import softmax_cross_entropy, accuracy, classification_loss, lm_loss
 

@@ -1,188 +1,373 @@
 """Client-update compression — the paper's explicit follow-up direction
 (footnote 7: Konečný et al., "Federated Learning: Strategies for Improving
-Communication Efficiency", NIPS-W 2016), implemented as composable codecs
-over the FedAvg client delta  Δ_k = w_k - w_t.
+Communication Efficiency", NIPS-W 2016), as statically-shaped codec
+transforms over the raveled client delta  Δ_k = w_k - w_t.
 
 FedAvg reduces the NUMBER of rounds; these codecs reduce BYTES PER ROUND —
-the two multiply. All codecs are unbiased (E[decode(encode(Δ))] = Δ), so
-the server average remains an unbiased estimate of the uncompressed one.
+the two multiply. Every codec is a pair of pure, vmappable functions over
+the (N,) delta VECTOR (``utils.tree.tree_ravel_stacked`` adapts model
+pytrees), so the whole compressed round —
 
-    codec = quantize_codec(bits=8)            # or mask_codec / topk_codec
-    enc, aux = codec.encode(rng, delta_tree)  # what the client uploads
-    delta_hat = codec.decode(enc, aux)        # what the server applies
+    vmap(ClientUpdate) -> vmap(encode) -> decode+aggregate -> apply
+
+— traces into ONE jitted executable (``build_compressed_round_step``),
+exactly like the plain :func:`repro.core.engine.build_simulation_round_step`
+path. The legacy implementation looped over clients in Python with
+per-leaf host loops inside each codec; it recompiled per cohort and
+dispatched eagerly per client. It survives only as
+:func:`build_compressed_round_step_loop`, the benchmark baseline
+(``benchmarks/compression.py`` measures both).
+
+Codec API (see docs/compression.md)::
+
+    codec = quantize_codec(bits=8)        # or identity/mask/topk_codec
+    payload = codec.encode(key, flat)     # flat: (N,) delta; static shapes
+    delta_hat = codec.decode(payload, n)  # (n,) fp32
+    codec.wire_bytes(n)                   # static expected upload bytes
+    codec.payload_bytes(payload)          # realized bytes (host-side)
+
+Aggregation: ``decode_aggregate(codec, payloads, weights, n)`` averages the
+m stacked payloads. Codecs may fuse it — the quantize codec routes through
+the Pallas ``quantized_aggregate`` kernel, which dequantizes uint8 codes
+and accumulates the weighted mean in fp32 in one pass, so the server never
+materializes the dense (m, N) fp32 deltas.
 
 Codecs:
-- ``quantize_codec(bits)``   stochastic uniform quantization per leaf
-                             (4/8-bit), scale in fp32: 4-8x fewer bytes.
-- ``mask_codec(keep_frac)``  random-mask subsampling with 1/p rescaling
-                             (unbiased); the mask regenerates from a shared
-                             integer seed, so only values + 1 seed upload.
-- ``topk_codec(keep_frac)``  magnitude top-k with indices (biased but
-                             norm-preserving option used in practice;
-                             flagged `unbiased=False`).
+- ``identity_codec()``       fp32 passthrough (the equivalence baseline).
+- ``quantize_codec(bits)``   stochastic uniform quantization, per-``chunk``
+                             fp32 (lo, scale): 4-8x fewer bytes, unbiased.
+- ``mask_codec(keep_frac)``  random-mask subsampling with 1/p rescaling;
+                             the mask regenerates from a shared seed, so
+                             only kept values + 1 seed upload. Unbiased.
+- ``topk_codec(keep_frac)``  magnitude top-k with int32 indices (biased but
+                             norm-preserving; flagged ``unbiased=False``).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.fedavg_agg import fedavg_aggregate
+from repro.kernels.ops import default_interpret, quantized_fedavg_aggregate
+from repro.utils.tree import tree_ravel, tree_ravel_stacked, tree_size, tree_unravel
+
+# Charged once per upload by codecs whose SERVER-side decode must regrow
+# client randomness from a shared seed (the mask codec: kept values + seed
+# travel, indices are reconstructed). Codecs whose randomness stays
+# client-local (quantize's stochastic rounding) have nothing to ship.
+SEED_BYTES = 8
+
 
 class Codec(NamedTuple):
-    encode: Callable  # (key, tree) -> (payload, aux)
-    decode: Callable  # (payload, aux) -> tree
-    bytes_fn: Callable  # payload -> int (upload bytes)
+    """A statically-shaped update codec over raveled (N,) delta vectors.
+
+    ``encode(key, flat)`` returns a payload dict of fixed-shape arrays (so
+    it vmaps over clients and traces into the round executable);
+    ``decode(payload, n)`` rebuilds the (n,) fp32 delta estimate — ``n`` is
+    the STATIC true size, since padded codecs store a multiple of their
+    chunk. ``wire_bytes(n)`` is the static expected upload size from shape
+    metadata alone; ``payload_bytes(payload)`` is the realized size of one
+    concrete payload (host-side — for the mask codec these differ, see its
+    docstring). ``aggregate`` optionally fuses decode into the weighted
+    server mean (payloads stacked with a leading client axis, RAW count
+    weights); ``decode_aggregate`` is the sanctioned entry point.
+    """
+
+    name: str
+    encode: Callable
+    decode: Callable
+    wire_bytes: Callable
+    payload_bytes: Callable
     unbiased: bool
+    aggregate: Optional[Callable] = None
 
 
-def _tree_bytes(tree) -> int:
-    return sum(np.asarray(l).size * np.asarray(l).dtype.itemsize
-               for l in jax.tree.leaves(tree))
+def identity_codec() -> Codec:
+    """fp32 passthrough: compressed pipeline == plain pipeline, bit-for-bit
+    modulo fp32 accumulation order. The equivalence-test baseline."""
+
+    def encode(key, flat):
+        return {"values": flat.astype(jnp.float32)}
+
+    def decode(payload, n):
+        return payload["values"][:n]
+
+    return Codec(
+        name="identity",
+        encode=encode,
+        decode=decode,
+        wire_bytes=lambda n: 4 * n,
+        payload_bytes=lambda p: int(np.asarray(p["values"]).size) * 4,
+        unbiased=True,
+    )
 
 
-def quantize_codec(bits: int = 8) -> Codec:
-    """Stochastic uniform quantization to 2^bits levels per leaf."""
+def quantize_codec(bits: int = 8, chunk: int = 512) -> Codec:
+    """Stochastic uniform quantization to 2^bits levels.
+
+    The flat vector is zero-padded to a multiple of ``chunk`` and split
+    into (C, chunk) rows; each row quantizes against its own fp32
+    (lo, scale) range, so one outlier coordinate only costs its own chunk's
+    resolution (the per-leaf ranges of the legacy codec, made static).
+    Stochastic rounding keeps E[decode(encode(x))] = x per coordinate;
+    constant chunks (hi == lo, scale 0) decode EXACTLY to lo.
+
+    Aggregation fuses into the Pallas ``quantized_aggregate`` kernel: the
+    server reads the uint codes directly and never expands per-client fp32.
+    """
+    if bits < 1 or bits > 16:
+        raise ValueError(f"quantize_codec supports 1..16 bits, got {bits}")
     levels = 2**bits - 1
     store_dtype = jnp.uint8 if bits <= 8 else jnp.uint16
 
-    def encode(key, tree):
-        leaves, treedef = jax.tree.flatten(tree)
-        out, aux = [], []
-        for i, leaf in enumerate(leaves):
-            k = jax.random.fold_in(key, i)
-            lo = jnp.min(leaf).astype(jnp.float32)
-            hi = jnp.max(leaf).astype(jnp.float32)
-            scale = jnp.maximum(hi - lo, 1e-12)
-            x = (leaf.astype(jnp.float32) - lo) / scale * levels
-            # stochastic rounding keeps E[q] = x
-            q = jnp.floor(x + jax.random.uniform(k, leaf.shape))
-            out.append(jnp.clip(q, 0, levels).astype(store_dtype))
-            aux.append((lo, scale))
-        return (out, treedef), aux
+    def encode(key, flat):
+        n = flat.shape[0]
+        pad = (-n) % chunk
+        # Edge-pad, not zero-pad: a padded 0 would join the tail chunk's
+        # min/max and widen its range (coarser codes for the REAL tail
+        # coordinates); repeating the last real value leaves it untouched.
+        v = jnp.pad(flat.astype(jnp.float32), (0, pad), mode="edge").reshape(
+            -1, chunk
+        )
+        lo = jnp.min(v, axis=1)
+        scale = jnp.max(v, axis=1) - lo
+        safe = jnp.maximum(scale, 1e-12)
+        x = (v - lo[:, None]) / safe[:, None] * levels
+        # floor(x + U[0,1)) realizes stochastic rounding: E[q] = x.
+        q = jnp.floor(x + jax.random.uniform(key, v.shape))
+        return {
+            "q": jnp.clip(q, 0, levels).astype(store_dtype),
+            "lo": lo,
+            "scale": scale,
+            # true (unpadded) size, so payload_bytes charges the bit-packed
+            # wire — not the chunk-padded store — matching wire_bytes(n)
+            "n": jnp.int32(n),
+        }
 
-    def decode(payload, aux):
-        out, treedef = payload
-        leaves = [
-            (q.astype(jnp.float32) / levels) * scale + lo
-            for q, (lo, scale) in zip(out, aux)
-        ]
-        return jax.tree.unflatten(treedef, leaves)
+    def decode(payload, n):
+        q = payload["q"].astype(jnp.float32)
+        x = q * (payload["scale"] / levels)[:, None] + payload["lo"][:, None]
+        return x.reshape(-1)[:n]
 
-    def nbytes(payload):
-        out, _ = payload
-        return sum(np.asarray(q).size * (1 if bits <= 8 else 2) for q in out) + 8 * len(out)
+    def aggregate(payloads, weights, n, *, interpret, accum_dtype):
+        q = payloads["q"]                         # (m, C, chunk)
+        out = quantized_fedavg_aggregate(
+            q.reshape(q.shape[0], -1), payloads["lo"], payloads["scale"],
+            weights, chunk=chunk, levels=levels, interpret=interpret,
+            accum_dtype=accum_dtype,
+        )
+        return out[:n]
 
-    return Codec(encode, decode, nbytes, unbiased=True)
+    def wire_bytes(n: int) -> int:
+        # The wire packs codes at their true bit width (nibbles for 4-bit)
+        # plus 8 bytes of (lo, scale) per chunk; the in-simulation payload
+        # stores whole uint8/uint16 lanes. The stochastic-rounding key is
+        # client-local — decode needs only codes + ranges, so no seed ships.
+        n_chunks = -(-n // chunk)
+        return -(-n * bits // 8) + 8 * n_chunks
+
+    def payload_bytes(payload) -> int:
+        return wire_bytes(int(np.asarray(payload["n"])))
+
+    return Codec(
+        name=f"q{bits}",
+        encode=encode,
+        decode=decode,
+        wire_bytes=wire_bytes,
+        payload_bytes=payload_bytes,
+        unbiased=True,
+        aggregate=aggregate,
+    )
 
 
 def mask_codec(keep_frac: float = 0.1) -> Codec:
-    """Random-mask subsampling: keep each coordinate w.p. p, rescale by 1/p.
-    The mask is a function of (seed, leaf index) — the client uploads only
-    the kept VALUES and the integer seed (indices are reconstructed
-    server-side), so bytes ~ p * dense."""
+    """Random-mask subsampling: keep each coordinate w.p. p, rescale kept
+    values by 1/p (unbiased). The mask is a pure function of the shared
+    seed, so the wire carries only the kept VALUES plus that seed; the
+    payload keeps the dense masked vector (simulation convenience) plus the
+    realized kept-coordinate count.
 
-    def masks_for(key, tree):
-        leaves = jax.tree.leaves(tree)
-        return [
-            jax.random.bernoulli(jax.random.fold_in(key, i), keep_frac, l.shape)
-            for i, l in enumerate(leaves)
-        ]
+    Byte accounting is the REALIZED count: a Bernoulli(p) mask over n
+    coordinates keeps Binomial(n, p) of them, not exactly p*n — the legacy
+    ``bytes_fn`` reported the expectation and could misstate a concrete
+    upload by O(sqrt(n)) values. ``payload_bytes`` now charges
+    4 * kept + SEED_BYTES from the payload's own mask draw;
+    ``wire_bytes`` remains the static expectation.
+    """
+    if not 0.0 < keep_frac <= 1.0:
+        raise ValueError(f"keep_frac must be in (0, 1], got {keep_frac}")
 
-    def encode(key, tree):
-        leaves, treedef = jax.tree.flatten(tree)
-        masks = masks_for(key, tree)
-        vals = [l * m / keep_frac for l, m in zip(leaves, masks)]
-        # payload stores the masked dense tensor; a wire format would pack
-        # only nonzeros — bytes_fn accounts for the packed size.
-        return (vals, treedef), key
+    def encode(key, flat):
+        m = jax.random.bernoulli(key, keep_frac, flat.shape)
+        vals = jnp.where(m, flat.astype(jnp.float32) / keep_frac, 0.0)
+        return {"values": vals, "kept": jnp.sum(m).astype(jnp.int32)}
 
-    def decode(payload, aux):
-        vals, treedef = payload
-        return jax.tree.unflatten(treedef, vals)
+    def decode(payload, n):
+        return payload["values"][:n]
 
-    def nbytes(payload):
-        vals, _ = payload
-        return int(sum(np.asarray(v).size for v in vals) * keep_frac * 4) + 8
-
-    return Codec(encode, decode, nbytes, unbiased=True)
+    return Codec(
+        name=f"mask{keep_frac:g}",
+        encode=encode,
+        decode=decode,
+        wire_bytes=lambda n: 4 * int(round(keep_frac * n)) + SEED_BYTES,
+        payload_bytes=lambda p: 4 * int(np.asarray(p["kept"])) + SEED_BYTES,
+        unbiased=True,
+    )
 
 
 def topk_codec(keep_frac: float = 0.05) -> Codec:
-    """Magnitude top-k per leaf (+int32 indices on the wire). Biased."""
+    """Magnitude top-k (+int32 indices on the wire). Biased — the standard
+    norm-preserving heuristic; k = max(floor(p * n), 1) is static."""
+    if not 0.0 < keep_frac <= 1.0:
+        raise ValueError(f"keep_frac must be in (0, 1], got {keep_frac}")
 
-    def encode(key, tree):
-        leaves, treedef = jax.tree.flatten(tree)
-        payload = []
-        for l in leaves:
-            flat = l.reshape(-1)
-            k = max(int(flat.size * keep_frac), 1)
-            _, idx = jax.lax.top_k(jnp.abs(flat), k)
-            payload.append((idx, flat[idx], l.shape))
-        return (payload, treedef), None
+    def k_of(n: int) -> int:
+        return max(int(n * keep_frac), 1)
 
-    def decode(payload, aux):
-        entries, treedef = payload
-        leaves = []
-        for idx, vals, shape in entries:
-            flat = jnp.zeros(int(np.prod(shape)), vals.dtype)
-            leaves.append(flat.at[idx].set(vals).reshape(shape))
-        return jax.tree.unflatten(treedef, leaves)
+    def encode(key, flat):
+        k = k_of(flat.shape[0])
+        _, idx = jax.lax.top_k(jnp.abs(flat.astype(jnp.float32)), k)
+        return {
+            "idx": idx.astype(jnp.int32),
+            "values": jnp.take(flat, idx).astype(jnp.float32),
+        }
 
-    def nbytes(payload):
-        entries, _ = payload
-        return sum(np.asarray(i).size * 8 for i, _, _ in entries)
+    def decode(payload, n):
+        out = jnp.zeros((n,), jnp.float32)
+        return out.at[payload["idx"]].set(payload["values"])
 
-    return Codec(encode, decode, nbytes, unbiased=False)
+    return Codec(
+        name=f"top{keep_frac:g}",
+        encode=encode,
+        decode=decode,
+        wire_bytes=lambda n: 8 * k_of(n),
+        payload_bytes=lambda p: 8 * int(np.asarray(p["idx"]).size),
+        unbiased=False,
+    )
 
 
-def build_compressed_round_step(loss_fn, codec: Codec):
+# ---------------------------------------------------------------------------
+# server side: decode + aggregate
+# ---------------------------------------------------------------------------
+
+def decode_aggregate(codec: Codec, payloads, weights, n: int, *,
+                     interpret: Optional[bool] = None,
+                     accum_dtype=jnp.float32):
+    """Weighted-average m stacked payloads into one (n,) fp32 delta.
+
+    ``payloads``: the pytree returned by ``vmap(codec.encode)`` (every leaf
+    carries a leading client axis); ``weights``: (m,) RAW example counts
+    n_k — like ``server_aggregate``, this is the one sanctioned entry point
+    that normalizes them. Fused codecs (quantize) go straight to their
+    Pallas kernel; the generic path vmaps ``decode`` and reduces through
+    ``fedavg_aggregate``.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    if codec.aggregate is not None:
+        return codec.aggregate(payloads, weights, n, interpret=interpret,
+                               accum_dtype=accum_dtype)
+    flat = jax.vmap(lambda p: codec.decode(p, n))(payloads)      # (m, n)
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+    return fedavg_aggregate(flat, w, interpret=interpret,
+                            accum_dtype=accum_dtype)
+
+
+# ---------------------------------------------------------------------------
+# the compressed round, compiled
+# ---------------------------------------------------------------------------
+
+def build_compressed_round_step(loss_fn, codec: Codec, *,
+                                interpret: Optional[bool] = None,
+                                accum_dtype=jnp.float32):
     """Compressed FedAvg as a unified ``round_step`` (``core.engine``
-    protocol): each client uploads codec(Δ_k) instead of w_k; the server
-    averages the decoded deltas and applies them to the global model.
+    protocol), tracing to ONE executable: vmapped ClientUpdate, vmapped
+    ``codec.encode`` over the raveled deltas, fused decode+aggregate, apply.
 
-    The codec hook now targets the same (state, batch) API as the plain
-    simulation engine and the production mesh round, so swapping
-    compression in/out is a one-line change at the call site. ``batch.key``
-    seeds the stochastic codecs; ``batch.client_weights`` are raw counts
-    (normalized once in the weighted average)."""
-    from repro.core.fedavg import client_update
+    ``batch.key`` seeds the per-client codecs (split per client);
+    ``batch.client_weights`` are raw counts (normalized exactly once, in
+    :func:`decode_aggregate`). Losses are reduced with the same masked,
+    count-weighted formula as ``build_simulation_round_step``, so an
+    identity codec reproduces the plain pipeline to fp32 tolerance.
+    """
+    from repro.core.fedavg import client_update, masked_weighted_loss
+
+    interpret = default_interpret() if interpret is None else interpret
+
+    def round_step(state, rb):
+        params = state.params
+        upd = jax.vmap(
+            lambda b, msk: client_update(loss_fn, params, b, msk, rb.lr)
+        )
+        client_params, losses = upd(rb.data, rb.step_mask)
+        deltas = jax.tree.map(
+            lambda c, p: (c - p).astype(jnp.float32), client_params, params
+        )
+        flat, spec = tree_ravel_stacked(deltas)                  # (m, N)
+        keys = jax.random.split(rb.key, flat.shape[0])
+        payloads = jax.vmap(codec.encode)(keys, flat)
+        avg_flat = decode_aggregate(
+            codec, payloads, rb.client_weights, spec.total_size,
+            interpret=interpret, accum_dtype=accum_dtype,
+        )
+        avg_delta = tree_unravel(spec, avg_flat)
+        new_params = jax.tree.map(
+            lambda p, d: (p + d).astype(p.dtype), params, avg_delta
+        )
+        loss = masked_weighted_loss(losses, rb.step_mask, rb.client_weights)
+        return state._replace(params=new_params), {"loss": loss}
+
+    return round_step
+
+
+def build_compressed_round_step_loop(loss_fn, codec: Codec):
+    """LEGACY per-client Python loop — the pre-compiled-pipeline shape
+    (eager dispatch per client, host-side stacking, no fused aggregate).
+    Kept ONLY as the baseline for ``benchmarks/compression.py``, like
+    ``simulation.build_round_batch_host``; new code uses
+    :func:`build_compressed_round_step`.
+    """
+    from repro.core.fedavg import client_update, masked_weighted_loss
     from repro.utils.tree import tree_weighted_mean
 
     def round_step(state, rb):
         params = state.params
         m = jax.tree.leaves(rb.data)[0].shape[0]
-
-        def one_client(i, b, msk):
-            w_k, losses = client_update(loss_fn, params, b, msk, rb.lr)
-            delta = jax.tree.map(lambda a, b_: a - b_, w_k, params)
-            enc, aux = codec.encode(jax.random.fold_in(rb.key, i), delta)
-            return codec.decode(enc, aux), losses
-
-        deltas, losses = [], []
+        decoded, losses = [], []
         for i in range(m):
             b = jax.tree.map(lambda a: a[i], rb.data)
-            d, l = one_client(i, b, rb.step_mask[i])
-            deltas.append(d)
+            w_k, l = client_update(loss_fn, params, b, rb.step_mask[i], rb.lr)
+            delta = jax.tree.map(
+                lambda a, p: (a - p).astype(jnp.float32), w_k, params
+            )
+            flat, spec = tree_ravel(delta)
+            payload = codec.encode(jax.random.fold_in(rb.key, i), flat)
+            decoded.append(codec.decode(payload, spec.total_size))
             losses.append(l)
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
-        avg_delta = tree_weighted_mean(stacked, rb.client_weights)
+        stacked = jnp.stack(decoded)
+        avg_flat = jnp.asarray(tree_weighted_mean(stacked, rb.client_weights))
+        avg_delta = tree_unravel(spec, avg_flat)
         new_params = jax.tree.map(
             lambda p, d: (p + d).astype(p.dtype), params, avg_delta
         )
-        return state._replace(params=new_params), {"loss": jnp.mean(jnp.stack(losses))}
+        loss = masked_weighted_loss(
+            jnp.stack(losses), rb.step_mask, rb.client_weights
+        )
+        return state._replace(params=new_params), {"loss": loss}
 
     return round_step
 
 
-def compressed_round(loss_fn, params, batches, step_mask, weights, lr, codec, key):
+def compressed_round(loss_fn, params, batches, step_mask, weights, lr, codec,
+                     key):
     """One FedAvg round where each client uploads codec(Δ_k) instead of w_k.
 
-    Equivalent to fedavg_round when codec is the identity; with an unbiased
-    codec, E[new_params] equals the uncompressed round's result. Thin shim
-    over :func:`build_compressed_round_step` for positional-arg callers."""
+    Equivalent to ``fedavg_round`` when codec is the identity; with an
+    unbiased codec, E[new_params] equals the uncompressed round's result.
+    Thin positional-arg shim over :func:`build_compressed_round_step`."""
     from repro.core.engine import RoundBatch, RoundState
 
     step = build_compressed_round_step(loss_fn, codec)
@@ -192,8 +377,18 @@ def compressed_round(loss_fn, params, batches, step_mask, weights, lr, codec, ke
     return state.params, metrics["loss"]
 
 
+# ---------------------------------------------------------------------------
+# wire accounting
+# ---------------------------------------------------------------------------
+
+def wire_bytes(codec: Codec, params) -> int:
+    """Expected upload bytes for ONE client's update of this model under
+    this codec — pure static shape metadata (no encode, no device work),
+    so benchmark sweeps can price a codec grid for free. The dense fp32
+    baseline is ``4 * tree_size(params)``."""
+    return int(codec.wire_bytes(tree_size(params)))
+
+
 def upload_bytes_per_round(codec: Codec, params) -> int:
-    """Wire bytes for one client's update under this codec (vs dense fp32)."""
-    key = jax.random.PRNGKey(0)
-    payload, _ = codec.encode(key, params)
-    return codec.bytes_fn(payload)
+    """Back-compat alias of :func:`wire_bytes` (pre-PR-2 name)."""
+    return wire_bytes(codec, params)

@@ -59,7 +59,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fedavg import FedAvgConfig, client_update, sample_clients, server_aggregate
+from repro.core.fedavg import (
+    FedAvgConfig,
+    client_update,
+    masked_weighted_loss,
+    sample_clients,
+    server_aggregate,
+)
 from repro.data.batching import pack_clients
 from repro.kernels.ops import default_interpret
 
@@ -130,11 +136,8 @@ def build_simulation_round_step(
             interpret=interpret,
             accum_dtype=accum_dtype,
         )
-        w = rb.client_weights / jnp.sum(rb.client_weights)
-        per_client = jnp.sum(losses * rb.step_mask, axis=1) / jnp.maximum(
-            jnp.sum(rb.step_mask, axis=1), 1.0
-        )
-        return state._replace(params=new_params), {"loss": jnp.sum(w * per_client)}
+        loss = masked_weighted_loss(losses, rb.step_mask, rb.client_weights)
+        return state._replace(params=new_params), {"loss": loss}
 
     return round_step
 
@@ -199,6 +202,14 @@ class RoundEngine:
     pipeline under a single ``jax.jit``. ``num_compilations`` exposes the
     jit cache size so tests can assert the static-shape claim.
 
+    ``codec=`` swaps the server step for the compressed-upload pipeline
+    (``core.compression.build_compressed_round_step``) INSIDE the same
+    single executable: vmapped encode over the raveled client deltas, fused
+    decode+aggregate (the quantize codec's Pallas ``quantized_aggregate``
+    kernel), per-round codec keys threaded from the engine RNG. The
+    static-shape/compile-count guarantees are identical to the plain path —
+    asserted by tests/test_compression.py's compile-count test.
+
     Cost model: device memory is K x (pool of the LARGEST client) and each
     round scans the largest client's step count (smaller clients mask the
     tail). That trade buys zero recompiles and zero host assembly; for
@@ -216,6 +227,7 @@ class RoundEngine:
         cfg: FedAvgConfig,
         eval_fn: Optional[Callable] = None,
         *,
+        codec=None,
         interpret: Optional[bool] = None,
         accum_dtype=jnp.float32,
     ):
@@ -226,6 +238,7 @@ class RoundEngine:
         self.rng = np.random.default_rng(cfg.seed)
         self.round_idx = 0
         self.history = History()
+        self.codec = codec
         self.interpret = default_interpret() if interpret is None else interpret
         self.accum_dtype = accum_dtype
 
@@ -245,6 +258,7 @@ class RoundEngine:
                 spe=packed.max_real_steps_per_epoch,
                 B=packed.batch_size,
                 has_labels=self._y is not None,
+                codec=codec,
                 interpret=self.interpret,
                 accum_dtype=jnp.dtype(accum_dtype),
             ),
@@ -378,15 +392,26 @@ def _assemble_batches(px, py, counts, spe_arr, ids, key, *, E, spe, B, has_label
 
 def _engine_round(
     loss_fn, params, px, py, counts, spe_arr, ids, key, lr,
-    *, E, spe, B, has_labels, interpret, accum_dtype,
+    *, E, spe, B, has_labels, codec, interpret, accum_dtype,
 ):
     batch, mask, w = _assemble_batches(
         px, py, counts, spe_arr, ids, key, E=E, spe=spe, B=B, has_labels=has_labels
     )
-    step = build_simulation_round_step(
-        loss_fn, interpret=interpret, accum_dtype=accum_dtype
-    )
+    if codec is None:
+        step = build_simulation_round_step(
+            loss_fn, interpret=interpret, accum_dtype=accum_dtype
+        )
+        codec_key = None
+    else:
+        from repro.core.compression import build_compressed_round_step
+
+        step = build_compressed_round_step(
+            loss_fn, codec, interpret=interpret, accum_dtype=accum_dtype
+        )
+        # Decorrelate the codec stream from the batch-permutation stream
+        # (which consumed split(key, m*E) above).
+        codec_key = jax.random.fold_in(key, 0x5EED)
     state, metrics = step(
-        RoundState(params), RoundBatch(batch, mask, w, lr=lr, key=None)
+        RoundState(params), RoundBatch(batch, mask, w, lr=lr, key=codec_key)
     )
     return state.params, metrics["loss"]

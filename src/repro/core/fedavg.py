@@ -80,6 +80,19 @@ def client_update(
     return params, losses
 
 
+def masked_weighted_loss(losses, step_mask, client_weights):
+    """Round train-loss metric shared by every round_step implementation:
+    mean loss over each client's REAL (unmasked) steps, weighted by client
+    example count. One definition — the identity-codec equivalence tests
+    require the plain, compressed, and legacy-loop paths to agree
+    bit-for-bit on it."""
+    w = client_weights / jnp.sum(client_weights)
+    per_client = jnp.sum(losses * step_mask, axis=1) / jnp.maximum(
+        jnp.sum(step_mask, axis=1), 1.0
+    )
+    return jnp.sum(w * per_client)
+
+
 def server_aggregate(stacked_params, client_weights, *, interpret=None,
                      accum_dtype=jnp.float32):
     """w_{t+1} <- sum_k (n_k/n) w^k_{t+1} — Algorithm 1's server line.
@@ -113,12 +126,7 @@ def fedavg_round(loss_fn, params, batches, step_mask, client_weights, lr,
     client_params, losses = upd(batches, step_mask)
     new_params = server_aggregate(client_params, client_weights,
                                   interpret=interpret)
-    # Mean loss over real (unmasked) steps, weighted by client size.
-    w = client_weights / jnp.sum(client_weights)
-    per_client = jnp.sum(losses * step_mask, axis=1) / jnp.maximum(
-        jnp.sum(step_mask, axis=1), 1.0
-    )
-    return new_params, jnp.sum(w * per_client)
+    return new_params, masked_weighted_loss(losses, step_mask, client_weights)
 
 
 def one_shot_average(loss_fn, params, client_batches, client_masks, weights, lr):

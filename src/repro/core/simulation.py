@@ -84,8 +84,11 @@ class FederatedTrainer:
         client_data: Sequence[Tuple[np.ndarray, Optional[np.ndarray]]],
         cfg: FedAvgConfig,
         eval_fn: Optional[Callable] = None,
+        codec=None,
     ):
-        self.engine = RoundEngine(loss_fn, init_params, client_data, cfg, eval_fn)
+        self.engine = RoundEngine(
+            loss_fn, init_params, client_data, cfg, eval_fn, codec=codec
+        )
         self.loss_fn = loss_fn
         self.client_data = list(client_data)
         self.cfg = cfg

@@ -64,6 +64,18 @@ def partition_pathological_noniid(
 def partition_dirichlet(
     labels: np.ndarray, n_clients: int, alpha: float = 0.5, seed: int = 0
 ) -> FederatedDataset:
+    """Dir(alpha) label-skew. Every client is guaranteed >= 1 example
+    (requires n_examples >= n_clients): small alpha at small n / large K
+    routinely draws near-zero proportions for some clients, and an empty
+    client breaks every downstream consumer that divides by n_k or packs
+    per-client pools (``pack_clients`` rejects zero-row clients). Empties
+    are refilled by redistributing one example at a time from the currently
+    largest client, which perturbs the drawn distribution the least."""
+    if len(labels) < n_clients:
+        raise ValueError(
+            f"partition_dirichlet needs >= 1 example per client: "
+            f"{len(labels)} examples < {n_clients} clients"
+        )
     rng = np.random.default_rng(seed)
     n_classes = int(labels.max()) + 1
     clients: List[list] = [[] for _ in range(n_clients)]
@@ -74,6 +86,10 @@ def partition_dirichlet(
         cuts = (np.cumsum(props)[:-1] * len(idx)).astype(int)
         for k, part in enumerate(np.split(idx, cuts)):
             clients[k].extend(part.tolist())
+    for k in range(n_clients):
+        while not clients[k]:
+            donor = max(range(n_clients), key=lambda j: len(clients[j]))
+            clients[k].append(clients[donor].pop())
     return FederatedDataset(
         client_indices=[np.array(sorted(c), dtype=np.int64) for c in clients]
     )

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels.ce_loss import fused_cross_entropy
 from repro.kernels.fedavg_agg import fedavg_aggregate
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.quantized_agg import quantized_aggregate
 from repro.kernels.ssm_scan import ssm_scan
 from repro.utils.tree import tree_ravel_stacked, tree_unravel
 
@@ -61,6 +62,31 @@ def tree_fedavg_aggregate(stacked_params, weights, *, interpret=False,
     avg = fedavg_aggregate(flat, w, interpret=interpret,
                            accum_dtype=accum_dtype, block_n=block_n)
     return tree_unravel(spec, avg)
+
+
+def quantized_fedavg_aggregate(codes, lo, scale, weights, *, chunk, levels,
+                               interpret=False, accum_dtype=jnp.float32,
+                               block_chunks=None):
+    """Fused dequantize + weighted-average of uint8/uint16 client payloads
+    — the compressed-upload server line, through the Pallas
+    ``quantized_aggregate`` kernel.
+
+    ``weights`` are RAW example counts n_k, normalized here (the kernel
+    asserts the normalized contract, mirroring ``tree_fedavg_aggregate``).
+    Returns the (N_pad,) fp32 averaged delta; callers slice to the real N.
+    """
+    if block_chunks is None:
+        # Same policy as tree_fedavg_aggregate: VMEM-sized tiles on
+        # hardware, few huge blocks under the per-grid-cell-cost Python
+        # interpreter.
+        block_chunks = (1 << 14) if interpret else 32
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+    return quantized_aggregate(
+        codes, lo, scale, w, chunk=chunk, levels=levels,
+        block_chunks=block_chunks, interpret=interpret,
+        accum_dtype=accum_dtype,
+    )
 
 
 def mamba_ssm_scan(dt, Bm, Cm, x, A, h0, *, chunk=0, interpret=False):

@@ -1,0 +1,144 @@
+"""Pallas TPU kernel fusing dequantization into the FedAvg server
+aggregation — the compressed-upload analogue of ``fedavg_agg``.
+
+Under the quantize codec (``core.compression.quantize_codec``) each client
+uploads its delta as uint8/uint16 codes plus per-chunk fp32 (lo, scale)
+range metadata. The naive server decodes every client to a dense fp32
+vector and then averages — materializing K x N fp32 (4-8x the wire size)
+in HBM just to immediately reduce it away. This kernel never does: each
+grid cell streams a (K, block) tile of CODES into VMEM, dequantizes and
+weighted-accumulates in ``accum_dtype`` (fp32 by default) registers, and
+writes only the (block,) averaged slice. Peak server memory for the
+aggregation stays at the compressed payload size + one dense output.
+
+Layout contract (produced by ``quantize_codec``'s encode):
+
+  codes:  (K, N_pad) uint8/uint16, N_pad a multiple of ``chunk``; code q in
+          [0, levels] represents lo_c + q/levels * scale_c of its chunk c.
+  lo:     (K, C) fp32, C = N_pad // chunk — per-chunk offset.
+  scale:  (K, C) fp32 — per-chunk range (hi - lo; 0 for constant chunks,
+          which dequantize exactly to lo).
+  weights:(K,) fp32, **pre-normalized to sum to 1** — same contract as
+          ``fedavg_aggregate``, normalization happens in exactly one
+          sanctioned place (``core.compression.decode_aggregate`` /
+          ``core.fedavg.server_aggregate``). Asserted eagerly on concrete
+          weights, documented for traced ones.
+
+``interpret=True`` runs the kernel body in the Pallas interpreter — the
+CPU test/CI fallback (Pallas does not lower on the CPU backend). On TPU
+leave the default and keep ``block_chunks`` such that
+(K+2) * block_chunks * chunk * 4 bytes fits VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qagg_kernel(w_ref, codes_ref, lo_ref, scale_ref, o_ref, *,
+                 chunk, levels, accum_dtype):
+    # codes_ref: (K, bc*chunk); lo/scale_ref: (K, bc); w_ref: (K, 1).
+    q = codes_ref[...].astype(accum_dtype)                     # (K, bn)
+    K, bn = q.shape
+    bc = bn // chunk
+    step = (scale_ref[...] / levels).astype(accum_dtype)       # (K, bc)
+    lo = lo_ref[...].astype(accum_dtype)                       # (K, bc)
+    deq = q.reshape(K, bc, chunk) * step[:, :, None] + lo[:, :, None]
+    w = w_ref[...].astype(accum_dtype)                         # (K, 1)
+    acc = jnp.sum(deq.reshape(K, bn) * w, axis=0, keepdims=True)
+    o_ref[...] = acc.astype(o_ref.dtype)[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("chunk", "levels", "block_chunks", "interpret",
+                     "accum_dtype"),
+)
+def _qagg_impl(codes, lo, scale, weights, *, chunk, levels, block_chunks,
+               interpret, accum_dtype):
+    K, n_pad = codes.shape
+    C = n_pad // chunk
+    bc = min(block_chunks, C)
+    pad_c = (-C) % bc
+    if pad_c:
+        # Zero lo/scale dequantize the padded chunks to exactly 0, so the
+        # padded tail contributes nothing and is sliced off by the caller.
+        codes = jnp.pad(codes, ((0, 0), (0, pad_c * chunk)))
+        lo = jnp.pad(lo, ((0, 0), (0, pad_c)))
+        scale = jnp.pad(scale, ((0, 0), (0, pad_c)))
+    nb = (C + pad_c) // bc
+    bn = bc * chunk
+    w2 = weights.reshape(K, 1).astype(jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_qagg_kernel, chunk=chunk, levels=levels,
+                          accum_dtype=accum_dtype),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((K, bn), lambda i: (0, i)),
+            pl.BlockSpec((K, bc), lambda i: (0, i)),
+            pl.BlockSpec((K, bc), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb * bn,), jnp.dtype(accum_dtype)),
+        interpret=interpret,
+    )(w2, codes, lo, scale)
+    return out[:n_pad]
+
+
+def quantized_aggregate(
+    codes: jnp.ndarray,    # (K, N_pad) uint8/uint16 quantization codes
+    lo: jnp.ndarray,       # (K, C) per-chunk offsets, C = N_pad // chunk
+    scale: jnp.ndarray,    # (K, C) per-chunk ranges
+    weights: jnp.ndarray,  # (K,) normalized (sum to 1)
+    *,
+    chunk: int,
+    levels: int,
+    block_chunks: int = 32,
+    interpret: bool = False,
+    accum_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Fused dequantize + weighted mean over the client axis -> (N_pad,).
+
+    Matches ``fedavg_aggregate(dequantize(codes, lo, scale), weights)`` to
+    fp32 accumulation tolerance without ever materializing the (K, N_pad)
+    dense fp32 client deltas.
+    """
+    if codes.ndim != 2 or codes.shape[1] % chunk:
+        raise ValueError(
+            f"codes must be (K, C*chunk); got {codes.shape} with chunk={chunk}"
+        )
+    want = (codes.shape[0], codes.shape[1] // chunk)
+    if lo.shape != want or scale.shape != want:
+        raise ValueError(
+            f"lo/scale must be (K, C)={want}; got lo {lo.shape}, "
+            f"scale {scale.shape}"
+        )
+    if not isinstance(weights, jax.core.Tracer):
+        s = float(jnp.sum(jnp.asarray(weights, jnp.float32)))
+        if abs(s - 1.0) > 1e-3:
+            raise ValueError(
+                "quantized_aggregate requires pre-normalized weights "
+                f"(sum==1); got sum={s:.6f}. Normalize raw counts in "
+                "core.compression.decode_aggregate, nowhere else."
+            )
+    return _qagg_impl(
+        codes, lo, scale, weights,
+        chunk=chunk, levels=levels, block_chunks=block_chunks,
+        interpret=interpret, accum_dtype=jnp.dtype(accum_dtype),
+    )
+
+
+def dequantize_ref(codes, lo, scale, *, chunk, levels):
+    """Pure-jnp oracle: expand codes back to dense fp32 (K, N_pad).
+
+    The reference the kernel is tested against (dequantize-then-
+    ``fedavg_aggregate``); also documents the code -> value mapping."""
+    K, n_pad = codes.shape
+    C = n_pad // chunk
+    q = codes.astype(jnp.float32).reshape(K, C, chunk)
+    x = q * (scale / levels)[:, :, None] + lo[:, :, None]
+    return x.reshape(K, n_pad)

@@ -110,8 +110,17 @@ def tree_ravel_stacked(stacked):
     stacked slice — and ``spec`` describing the UNSTACKED tree, so
     ``tree_unravel(spec, flat[k])`` (or the aggregated row) rebuilds a
     single-model pytree. This is the adapter between model pytrees and the
-    (K, N) layout of the Pallas ``fedavg_aggregate`` kernel."""
+    (K, N) layout of the Pallas ``fedavg_aggregate`` /
+    ``quantized_aggregate`` kernels. Mixed leaf dtypes concatenate to their
+    jnp promotion (e.g. bf16 + f32 -> f32); the per-leaf dtypes recorded in
+    ``spec`` still round-trip each leaf back to its storage dtype."""
     leaves, treedef = jax.tree.flatten(stacked)
+    if not leaves:
+        raise ValueError(
+            "tree_ravel_stacked needs at least one leaf: the stacked (K) "
+            "axis is read from the leaves, so an empty tree has no client "
+            "dimension to ravel"
+        )
     K = leaves[0].shape[0]
     spec = TreeSpec(
         treedef,

@@ -11,6 +11,7 @@ from repro.kernels import ref
 from repro.kernels.ce_loss import fused_cross_entropy
 from repro.kernels.fedavg_agg import fedavg_aggregate
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.quantized_agg import dequantize_ref, quantized_aggregate
 from repro.kernels.ssm_scan import ssm_scan
 from repro.kernels import ops
 
@@ -90,6 +91,59 @@ def test_tree_fedavg_aggregate_matches_server_line(rng):
     b = tree_weighted_mean(stacked, w)
     for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
         np.testing.assert_allclose(x, y, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# quantized aggregation (fused dequantize + weighted mean)
+# ---------------------------------------------------------------------------
+
+def _quantized_payload(rng, K, N, chunk, code_dtype=np.uint8, levels=255):
+    n_pad = -(-N // chunk) * chunk
+    codes = rng.integers(0, levels + 1, (K, n_pad)).astype(code_dtype)
+    lo = rng.normal(size=(K, n_pad // chunk)).astype(np.float32)
+    scale = rng.uniform(0.0, 2.0, (K, n_pad // chunk)).astype(np.float32)
+    scale[rng.uniform(size=scale.shape) < 0.2] = 0.0  # constant chunks
+    return jnp.asarray(codes), jnp.asarray(lo), jnp.asarray(scale)
+
+
+@pytest.mark.parametrize("K", [1, 2, 17])
+@pytest.mark.parametrize("N,chunk,bc", [(33, 16, 4), (1000, 64, 3)])  # ragged
+def test_quantized_aggregate_matches_dequantize_oracle(rng, K, N, chunk, bc):
+    """Acceptance: the fused kernel == dequantize-then-fedavg_aggregate for
+    K in {1, 2, 17}, uint8 payloads, ragged N (incl. scale==0 chunks)."""
+    codes, lo, scale = _quantized_payload(rng, K, N, chunk)
+    w = jnp.asarray(rng.uniform(0.1, 5.0, K).astype(np.float32))
+    w = w / w.sum()
+    out = quantized_aggregate(codes, lo, scale, w, chunk=chunk, levels=255,
+                              block_chunks=bc, interpret=True)
+    dense = dequantize_ref(codes, lo, scale, chunk=chunk, levels=255)
+    want = fedavg_aggregate(dense, w, interpret=True)
+    n_pad = codes.shape[1]
+    assert out.shape == (n_pad,) and out.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+def test_quantized_aggregate_uint16_levels(rng):
+    codes, lo, scale = _quantized_payload(rng, 3, 100, 32,
+                                          code_dtype=np.uint16, levels=65535)
+    w = jnp.full((3,), 1 / 3, jnp.float32)
+    out = quantized_aggregate(codes, lo, scale, w, chunk=32, levels=65535,
+                              block_chunks=2, interpret=True)
+    dense = dequantize_ref(codes, lo, scale, chunk=32, levels=65535)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(fedavg_aggregate(dense, w, interpret=True)),
+        atol=1e-4)
+
+
+def test_quantized_aggregate_rejects_bad_inputs(rng):
+    codes, lo, scale = _quantized_payload(rng, 2, 64, 16)
+    with pytest.raises(ValueError, match="pre-normalized"):
+        quantized_aggregate(codes, lo, scale, jnp.asarray([1.0, 2.0]),
+                            chunk=16, levels=255, interpret=True)
+    with pytest.raises(ValueError, match="C\\*chunk"):
+        quantized_aggregate(codes[:, :30], lo, scale,
+                            jnp.asarray([0.5, 0.5]), chunk=16, levels=255,
+                            interpret=True)
 
 
 # ---------------------------------------------------------------------------

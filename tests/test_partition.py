@@ -61,3 +61,44 @@ def test_dirichlet_cover():
     fed = partition_dirichlet(labels, 50, alpha=0.5)
     all_idx = np.concatenate([c for c in fed.client_indices if len(c)])
     assert len(np.unique(all_idx)) == 10000
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(20, 60))
+def test_dirichlet_no_empty_clients_small_n_large_k(seed, k):
+    """Regression: small n / large K at skewed alpha used to leave clients
+    with ZERO examples (Dirichlet props rounding to empty slices), which
+    breaks pack_clients' per-client pools and every n_k division. Empties
+    must be refilled from the largest client, preserving the disjoint
+    cover."""
+    rng = np.random.default_rng(seed)
+    n = k + int(rng.integers(0, 30))  # barely enough examples
+    labels = rng.integers(0, 5, n).astype(np.int32)
+    fed = partition_dirichlet(labels, k, alpha=0.05, seed=seed)
+    sizes = fed.client_sizes
+    assert (sizes >= 1).all(), sizes
+    all_idx = np.concatenate(fed.client_indices)
+    assert len(all_idx) == n and len(np.unique(all_idx)) == n
+
+
+def test_dirichlet_refill_feeds_pack_clients():
+    """End to end: the refilled partition must pack (the original failure
+    mode was a ZeroDivisionError on a zero-count client)."""
+    from repro.data.batching import pack_clients
+
+    rng = np.random.default_rng(3)
+    labels = rng.integers(0, 3, 40).astype(np.int32)
+    x = rng.normal(size=(40, 4)).astype(np.float32)
+    fed = partition_dirichlet(labels, 30, alpha=0.05, seed=1)
+    clients = [(x[ix], labels[ix]) for ix in fed.client_indices]
+    packed = pack_clients(clients, batch_size=4)
+    assert packed.num_clients == 30
+    assert (packed.counts >= 1).all()
+
+
+def test_dirichlet_rejects_fewer_examples_than_clients():
+    import pytest
+
+    labels = np.zeros(5, np.int32)
+    with pytest.raises(ValueError, match="needs >= 1 example per client"):
+        partition_dirichlet(labels, 10)

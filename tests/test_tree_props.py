@@ -1,0 +1,159 @@
+"""Property-based (hypothesis; deterministic stub in the pinned container)
+invariants for the ravel adapters and the codec layer, over randomized tree
+shapes and dtypes — the cases a hand-picked fixture misses: bf16 storage
+leaves, constant leaves (hi == lo), size-1 and scalar-per-slice leaves,
+deeply nested structures."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import mask_codec, quantize_codec, topk_codec
+from repro.utils.tree import (
+    tree_ravel,
+    tree_ravel_stacked,
+    tree_size,
+    tree_unravel,
+)
+
+pytestmark = pytest.mark.slow
+
+
+def _random_tree(seed: int, bf16: bool, case: str, lead=()):
+    """A nested dict tree exercising the adapter's corner shapes. ``lead``
+    prepends a stacked (K, ...) axis for the _stacked variant."""
+    r = np.random.default_rng(seed)
+
+    def leaf(shape, dtype=np.float32, const=None):
+        if const is not None:
+            a = np.full(lead + shape, const, np.float32)
+        else:
+            a = r.normal(size=lead + shape).astype(np.float32)
+        x = jnp.asarray(a)
+        return x.astype(jnp.bfloat16) if dtype == "bf16" else x
+
+    if case == "tiny":
+        # size-1 leaves and a per-slice scalar (shape () after the lead axis)
+        return {
+            "one": leaf((1,)),
+            "scalar": leaf(()),
+            "row": leaf((1, 3), dtype="bf16" if bf16 else np.float32),
+        }
+    if case == "const":
+        # hi == lo everywhere: quantization must be exact, not just
+        # unbiased. One SHARED constant — with per-chunk ranges a chunk
+        # straddling two differently-constant leaves is not itself constant.
+        c = float(r.normal())
+        return {
+            "flat": leaf((17,), const=c),
+            "block": leaf((3, 5), const=c),
+        }
+    return {
+        "w": leaf((int(r.integers(2, 9)), int(r.integers(2, 9)))),
+        "b": leaf((int(r.integers(1, 7)),),
+                  dtype="bf16" if bf16 else np.float32),
+        "nested": {"u": leaf((2, 1, 3)), "v": leaf((1,))},
+    }
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    bf16=st.booleans(),
+    case=st.sampled_from(["mixed", "tiny", "const"]),
+)
+def test_tree_ravel_roundtrip_property(seed, bf16, case):
+    tree = _random_tree(seed, bf16, case)
+    flat, spec = tree_ravel(tree)
+    assert flat.shape == (spec.total_size,) == (tree_size(tree),)
+    back = tree_unravel(spec, flat)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        # bf16 -> promoted flat -> bf16 is exact (widening then narrowing
+        # the same value); fp32 round-trips bit-for-bit
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    bf16=st.booleans(),
+    case=st.sampled_from(["mixed", "tiny", "const"]),
+    K=st.sampled_from([1, 3]),
+)
+def test_tree_ravel_stacked_roundtrip_property(seed, bf16, case, K):
+    stacked = _random_tree(seed, bf16, case, lead=(K,))
+    flat, spec = tree_ravel_stacked(stacked)
+    per = tree_size(stacked) // K
+    assert flat.shape == (K, per) and spec.total_size == per
+    for k in range(K):
+        one = tree_unravel(spec, flat[k])
+        want = jax.tree.map(lambda l: l[k], stacked)
+        for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(one)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+def test_tree_ravel_stacked_rejects_empty_tree():
+    with pytest.raises(ValueError, match="at least one leaf"):
+        tree_ravel_stacked({})
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    bf16=st.booleans(),
+    case=st.sampled_from(["mixed", "tiny", "const"]),
+    codec_name=st.sampled_from(["q8", "q4", "mask"]),
+)
+def test_codec_unbiased_over_random_trees(seed, bf16, case, codec_name):
+    """E[decode(encode(ravel(tree)))] == ravel(tree) for the unbiased
+    codecs, whatever shapes/dtypes the tree mixes into the flat vector.
+    Constant trees (hi == lo) must come back EXACTLY under quantization."""
+    codec = {
+        "q8": quantize_codec(8, chunk=16),
+        "q4": quantize_codec(4, chunk=16),
+        "mask": mask_codec(0.5),
+    }[codec_name]
+    assert codec.unbiased
+    tree = _random_tree(seed, bf16, case)
+    flat, spec = tree_ravel(tree)
+    flat = flat.astype(jnp.float32)
+    n = spec.total_size
+    if case == "const" and codec_name.startswith("q"):
+        dec = codec.decode(codec.encode(jax.random.PRNGKey(seed), flat), n)
+        np.testing.assert_array_equal(np.asarray(dec), np.asarray(flat))
+        return
+    reps = 120
+    acc = jnp.zeros_like(flat)
+    for i in range(reps):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        acc = acc + codec.decode(codec.encode(key, flat), n) / reps
+    span = float(jnp.max(jnp.abs(flat))) + 1e-6
+    if codec_name == "mask":
+        tol = 3.5 * span * float(np.sqrt((1 / 0.5 - 1) / reps)) + 0.05
+    else:
+        levels = 255 if codec_name == "q8" else 15
+        tol = 4 * (2 * span / levels) / (2 * np.sqrt(reps)) + 2e-3
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(flat), atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 70))
+def test_topk_reconstruction_support(seed, n):
+    """top-k decode places exactly its k values at their claimed indices
+    and zero elsewhere, for any vector length (incl. n < 1/keep_frac)."""
+    r = np.random.default_rng(seed)
+    flat = jnp.asarray(r.normal(size=(n,)).astype(np.float32))
+    codec = topk_codec(0.25)
+    payload = codec.encode(jax.random.PRNGKey(seed), flat)
+    dec = np.asarray(codec.decode(payload, n))
+    k = max(int(n * 0.25), 1)
+    assert payload["idx"].shape == (k,)
+    nz = np.flatnonzero(dec)
+    assert set(nz).issubset(set(np.asarray(payload["idx"]).tolist()))
+    np.testing.assert_allclose(dec[np.asarray(payload["idx"])],
+                               np.asarray(payload["values"]))

@@ -69,7 +69,7 @@ def bench_wallclock(quick: bool) -> None:
     cfg = FedAvgConfig(C=1.0, E=1, B=10, lr=0.1, seed=0)
     codec = quantize_codec(8)
     eng = RoundEngine(model.loss, params, clients, cfg, codec=codec)
-    ids, key, lr = eng._next_round_inputs()
+    ids, _valid, key, lr = eng._next_round_inputs()
     batch, mask, w = eng.materialize_round_batch(ids, key)
     rb = RoundBatch(batch, mask, w, lr=lr, key=jax.random.fold_in(key, 1))
     state = RoundState(params)

@@ -74,6 +74,53 @@ def _bench_engine(model, params, clients, cfg, rounds):
     return per_round, eng.num_compilations
 
 
+def scaling(quick: bool = True) -> None:
+    """Device-count scaling column for the cohort-sharded engine: per-round
+    wall time of the SAME unbalanced population at D = 1, 2, 4, ... up to
+    however many devices the backend exposes, plain and quantize-codec
+    paths. On CPU, force a device count before any jax import::
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+            PYTHONPATH=src python -m benchmarks.run --only round_engine_scaling
+
+    (the D=1 row is the unsharded engine — the speedup baseline; on the
+    forced-host-device CPU backend the "devices" share the same cores, so
+    expect layout overhead rather than speedup there — the column exists to
+    pin the scaling MACHINERY; real scaling needs real chips).
+    """
+    from repro.core.compression import quantize_codec
+    from repro.launch.mesh import make_client_mesh
+
+    clients = _population(quick)
+    clients = [(x.reshape(len(x), -1), y) for x, y in clients]
+    rounds = 3 if quick else 10
+    model = mnist_2nn()
+    params = model.init(jax.random.PRNGKey(0))
+    cfg = FedAvgConfig(C=0.6, E=2, B=10, lr=0.1, seed=0)
+    n_dev = len(jax.devices())
+    dev_counts = [d for d in (1, 2, 4, 8, 16) if d <= n_dev]
+    if n_dev not in dev_counts:
+        dev_counts.append(n_dev)
+    if n_dev == 1:
+        emit("round_engine/scaling/note", 0.0,
+             "1_device_only;force_with=xla_force_host_platform_device_count")
+    for codec_name, codec in [("plain", None), ("q8", quantize_codec(8))]:
+        base_t = None
+        for d in dev_counts:
+            mesh = None if d == 1 else make_client_mesh(d)
+            eng = RoundEngine(model.loss, params, clients, cfg, codec=codec,
+                              mesh=mesh)
+            eng.round()  # compile outside the timed loop
+            t0 = time.perf_counter()
+            for _ in range(rounds):
+                jax.block_until_ready(eng.round()["loss"])
+            per_round = (time.perf_counter() - t0) / rounds
+            base_t = per_round if base_t is None else base_t
+            emit(f"round_engine/scaling/{codec_name}/D{d}", per_round * 1e6,
+                 f"speedup_vs_D1={base_t / max(per_round, 1e-12):.2f}x;"
+                 f"compilations={eng.num_compilations}")
+
+
 def main(quick: bool = True) -> None:
     clients = _population(quick)
     rounds = 5 if quick else 20

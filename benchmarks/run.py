@@ -35,6 +35,7 @@ SUITES = {
     "kernels": kernels_bench.main,
     "roofline": roofline_report.main,
     "round_engine": round_engine.main,
+    "round_engine_scaling": round_engine.scaling,
     "compression": compression.main,
 }
 

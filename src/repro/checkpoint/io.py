@@ -33,17 +33,35 @@ def _flatten_with_names(tree):
     return out
 
 
+def _to_npz_safe(arr: np.ndarray) -> np.ndarray:
+    """npz cannot encode ml_dtypes extension dtypes (bfloat16, fp8, ...):
+    ``np.savez`` silently degrades them to raw void bytes (|V2) that
+    ``np.load`` hands back as uninterpretable records. Store such leaves
+    viewed as the same-width unsigned int; restore re-views them through
+    the true dtype recorded in index.msgpack."""
+    if arr.dtype.kind == "V":
+        return arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+    return arr
+
+
+def _from_npz_safe(arr: np.ndarray, recorded_dtype: str) -> np.ndarray:
+    want = np.dtype(recorded_dtype)  # ml_dtypes names resolve once jax is up
+    if arr.dtype != want and want.kind == "V" and arr.dtype.kind == "u":
+        return arr.view(want)
+    return arr
+
+
 def save_checkpoint(ckpt_dir, tree, *, step: int, metadata: Optional[dict] = None):
     d = Path(ckpt_dir) / f"step_{step:08d}"
     d.mkdir(parents=True, exist_ok=True)
-    named = _flatten_with_names(tree)
-    arrays = {name: np.asarray(leaf) for name, leaf in named}
+    named = [(name, np.asarray(leaf)) for name, leaf in _flatten_with_names(tree)]
+    arrays = {name: _to_npz_safe(leaf) for name, leaf in named}
     np.savez(d / "arrays.npz", **arrays)
     index = {
         "step": step,
         "names": [n for n, _ in named],
         "shapes": [list(np.shape(a)) for _, a in named],
-        "dtypes": [str(np.asarray(a).dtype) for _, a in named],
+        "dtypes": [str(a.dtype) for _, a in named],
         "metadata": metadata or {},
     }
     (d / "index.msgpack").write_bytes(msgpack.packb(index))
@@ -63,8 +81,8 @@ def restore_checkpoint(ckpt_dir, tree_like, *, step: Optional[int] = None):
     named = _flatten_with_names(tree_like)
     assert [n for n, _ in named] == index["names"], "tree structure mismatch"
     leaves = []
-    for name, ref in named:
-        arr = data[name]
+    for (name, ref), recorded in zip(named, index["dtypes"]):
+        arr = _from_npz_safe(data[name], recorded)
         assert tuple(arr.shape) == tuple(np.shape(ref)), (name, arr.shape)
         leaves.append(jax.numpy.asarray(arr, dtype=ref.dtype if hasattr(ref, "dtype") else None))
     treedef = jax.tree_util.tree_structure(tree_like)

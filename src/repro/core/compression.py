@@ -51,7 +51,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.fedavg_agg import fedavg_aggregate
-from repro.kernels.ops import default_interpret, quantized_fedavg_aggregate
+from repro.kernels.ops import (
+    default_interpret,
+    quantized_fedavg_aggregate,
+    sharded_quantized_fedavg_aggregate,
+)
 from repro.utils.tree import tree_ravel, tree_ravel_stacked, tree_size, tree_unravel
 
 # Charged once per upload by codecs whose SERVER-side decode must regrow
@@ -73,7 +77,8 @@ class Codec(NamedTuple):
     concrete payload (host-side — for the mask codec these differ, see its
     docstring). ``aggregate`` optionally fuses decode into the weighted
     server mean (payloads stacked with a leading client axis, RAW count
-    weights); ``decode_aggregate`` is the sanctioned entry point.
+    weights; an ``axis_name`` kwarg selects the cohort-sharded partial-sum
+    mode — see ``decode_aggregate``, the sanctioned entry point).
     """
 
     name: str
@@ -152,8 +157,18 @@ def quantize_codec(bits: int = 8, chunk: int = 512) -> Codec:
         x = q * (payload["scale"] / levels)[:, None] + payload["lo"][:, None]
         return x.reshape(-1)[:n]
 
-    def aggregate(payloads, weights, n, *, interpret, accum_dtype):
+    def aggregate(payloads, weights, n, *, interpret, accum_dtype,
+                  axis_name=None):
         q = payloads["q"]                         # (m, C, chunk)
+        if axis_name is not None:
+            # Cohort-sharded: local partial sum over this shard's clients
+            # with raw weights, psum-finished across the client axis.
+            out = sharded_quantized_fedavg_aggregate(
+                q.reshape(q.shape[0], -1), payloads["lo"], payloads["scale"],
+                weights, chunk=chunk, levels=levels, axis_name=axis_name,
+                interpret=interpret, accum_dtype=accum_dtype,
+            )
+            return out[:n]
         out = quantized_fedavg_aggregate(
             q.reshape(q.shape[0], -1), payloads["lo"], payloads["scale"],
             weights, chunk=chunk, levels=levels, interpret=interpret,
@@ -255,7 +270,7 @@ def topk_codec(keep_frac: float = 0.05) -> Codec:
 
 def decode_aggregate(codec: Codec, payloads, weights, n: int, *,
                      interpret: Optional[bool] = None,
-                     accum_dtype=jnp.float32):
+                     accum_dtype=jnp.float32, axis_name=None):
     """Weighted-average m stacked payloads into one (n,) fp32 delta.
 
     ``payloads``: the pytree returned by ``vmap(codec.encode)`` (every leaf
@@ -264,13 +279,25 @@ def decode_aggregate(codec: Codec, payloads, weights, n: int, *,
     that normalizes them. Fused codecs (quantize) go straight to their
     Pallas kernel; the generic path vmaps ``decode`` and reduces through
     ``fedavg_aggregate``.
+
+    ``axis_name``: cohort-sharded mode (inside a ``shard_map`` over the
+    client axis). Each shard decodes and partially aggregates only its
+    local payload slice with UNnormalized weights; a ``psum`` finishes the
+    weighted sum and the weight total before the single division, so every
+    shard returns the same global delta (see docs/compression.md).
     """
     interpret = default_interpret() if interpret is None else interpret
     if codec.aggregate is not None:
         return codec.aggregate(payloads, weights, n, interpret=interpret,
-                               accum_dtype=accum_dtype)
+                               accum_dtype=accum_dtype, axis_name=axis_name)
     flat = jax.vmap(lambda p: codec.decode(p, n))(payloads)      # (m, n)
     w = jnp.asarray(weights, jnp.float32)
+    if axis_name is not None:
+        partial = fedavg_aggregate(flat, w, interpret=interpret,
+                                   accum_dtype=accum_dtype)
+        num = jax.lax.psum(partial, axis_name)
+        den = jax.lax.psum(jnp.sum(w), axis_name)
+        return num / den
     w = w / jnp.sum(w)
     return fedavg_aggregate(flat, w, interpret=interpret,
                             accum_dtype=accum_dtype)
@@ -282,16 +309,22 @@ def decode_aggregate(codec: Codec, payloads, weights, n: int, *,
 
 def build_compressed_round_step(loss_fn, codec: Codec, *,
                                 interpret: Optional[bool] = None,
-                                accum_dtype=jnp.float32):
+                                accum_dtype=jnp.float32, axis_name=None):
     """Compressed FedAvg as a unified ``round_step`` (``core.engine``
     protocol), tracing to ONE executable: vmapped ClientUpdate, vmapped
     ``codec.encode`` over the raveled deltas, fused decode+aggregate, apply.
 
-    ``batch.key`` seeds the per-client codecs (split per client);
-    ``batch.client_weights`` are raw counts (normalized exactly once, in
-    :func:`decode_aggregate`). Losses are reduced with the same masked,
-    count-weighted formula as ``build_simulation_round_step``, so an
-    identity codec reproduces the plain pipeline to fp32 tolerance.
+    ``batch.key`` seeds the per-client codecs — each client's key is
+    ``fold_in(key, global_slot)`` where ``global_slot`` is the client's
+    position in the FULL round cohort. Keying by global slot (not local
+    index) makes the codec stream invariant to cohort sharding: under
+    ``axis_name`` a shard holding slots [s, s + m/D) derives exactly the
+    keys the unsharded run would, so sharded and unsharded runs encode
+    identical payloads. ``batch.client_weights`` are raw counts (normalized
+    exactly once, in :func:`decode_aggregate`, which in sharded mode
+    finishes with a psum over ``axis_name``). Losses are reduced with the
+    same masked, count-weighted formula as ``build_simulation_round_step``,
+    so an identity codec reproduces the plain pipeline to fp32 tolerance.
     """
     from repro.core.fedavg import client_update, masked_weighted_loss
 
@@ -307,17 +340,22 @@ def build_compressed_round_step(loss_fn, codec: Codec, *,
             lambda c, p: (c - p).astype(jnp.float32), client_params, params
         )
         flat, spec = tree_ravel_stacked(deltas)                  # (m, N)
-        keys = jax.random.split(rb.key, flat.shape[0])
+        m = flat.shape[0]
+        slot0 = 0 if axis_name is None else jax.lax.axis_index(axis_name) * m
+        keys = jax.vmap(lambda s: jax.random.fold_in(rb.key, s))(
+            slot0 + jnp.arange(m, dtype=jnp.int32)
+        )
         payloads = jax.vmap(codec.encode)(keys, flat)
         avg_flat = decode_aggregate(
             codec, payloads, rb.client_weights, spec.total_size,
-            interpret=interpret, accum_dtype=accum_dtype,
+            interpret=interpret, accum_dtype=accum_dtype, axis_name=axis_name,
         )
         avg_delta = tree_unravel(spec, avg_flat)
         new_params = jax.tree.map(
             lambda p, d: (p + d).astype(p.dtype), params, avg_delta
         )
-        loss = masked_weighted_loss(losses, rb.step_mask, rb.client_weights)
+        loss = masked_weighted_loss(losses, rb.step_mask, rb.client_weights,
+                                    axis_name=axis_name)
         return state._replace(params=new_params), {"loss": loss}
 
     return round_step

@@ -37,6 +37,16 @@ shape::
 so benchmarks, examples and the compression codecs target one API instead
 of two divergent ones. ``core.simulation.FederatedTrainer`` is now a thin
 wrapper over :class:`RoundEngine` (see docs/engine.md for migration notes).
+
+Cohort sharding
+---------------
+``RoundEngine(mesh=..., client_axis=...)`` runs the identical round body
+inside a ``shard_map`` over a named client axis: m/D clients per device,
+pools and params replicated, cohorts padded with zero-weight ghost clients
+(``data.batching.pad_cohort``), and the Pallas aggregation in partial-sum
+mode finished by one ``psum`` (``ops.sharded_fedavg_aggregate``). All
+per-client randomness is keyed by GLOBAL cohort slot, so sharded and
+unsharded runs match round for round (tests/test_engine_sharded.py).
 """
 from __future__ import annotations
 
@@ -66,7 +76,7 @@ from repro.core.fedavg import (
     sample_clients,
     server_aggregate,
 )
-from repro.data.batching import pack_clients
+from repro.data.batching import pack_clients, pad_cohort
 from repro.kernels.ops import default_interpret
 
 
@@ -118,11 +128,18 @@ def build_simulation_round_step(
     *,
     interpret: Optional[bool] = None,
     accum_dtype=jnp.float32,
+    axis_name: Optional[str] = None,
 ) -> RoundStep:
     """RoundStep over explicit (m, n_steps, B, ...) batches: vmapped
     ClientUpdate then the Pallas-backed server aggregation. This is the
     compiled core of :class:`RoundEngine` and the reference implementation
-    of the protocol."""
+    of the protocol.
+
+    ``axis_name``: when the round body runs inside a ``shard_map`` over a
+    named client axis, each shard sees only its (m/D, ...) cohort slice;
+    aggregation and the loss reduction then finish with a ``psum`` over
+    that axis (``server_aggregate``'s partial-sum mode), so every shard
+    returns the identical new global params."""
     interpret = default_interpret() if interpret is None else interpret
 
     def round_step(state: RoundState, rb: RoundBatch):
@@ -135,8 +152,10 @@ def build_simulation_round_step(
             rb.client_weights,
             interpret=interpret,
             accum_dtype=accum_dtype,
+            axis_name=axis_name,
         )
-        loss = masked_weighted_loss(losses, rb.step_mask, rb.client_weights)
+        loss = masked_weighted_loss(losses, rb.step_mask, rb.client_weights,
+                                    axis_name=axis_name)
         return state._replace(params=new_params), {"loss": loss}
 
     return round_step
@@ -217,6 +236,20 @@ class RoundEngine:
     padding dominates and the legacy host path
     (``simulation.build_round_batch_host`` + ``fedavg_round``) can be the
     better tool — ``packed.overhead()`` quantifies the ratio.
+
+    Cohort sharding (``mesh=``): the paper's regime is many clients per
+    round and cheap local compute, so the vmapped cohort is embarrassingly
+    parallel over clients. Passing a 1-axis ``jax.sharding.Mesh`` (see
+    ``launch.mesh.make_client_mesh``) wraps the identical round body in a
+    ``shard_map`` over ``client_axis``: the packed population and global
+    params replicate, the sampled cohort splits m/D clients per device, and
+    the Pallas aggregation runs in partial-sum mode finished by one psum
+    (``ops.sharded_fedavg_aggregate`` / the codec analogue). Cohorts are
+    padded to a multiple of D with zero-weight ghost clients
+    (``data.batching.pad_cohort``), and all per-client randomness is keyed
+    by GLOBAL cohort slot, so a sharded run matches the unsharded run round
+    for round to fp32 tolerance — still within the same single executable
+    (see docs/engine.md).
     """
 
     def __init__(
@@ -230,6 +263,8 @@ class RoundEngine:
         codec=None,
         interpret: Optional[bool] = None,
         accum_dtype=jnp.float32,
+        mesh=None,
+        client_axis: str = "clients",
     ):
         self.loss_fn = loss_fn
         self.params = init_params
@@ -241,29 +276,67 @@ class RoundEngine:
         self.codec = codec
         self.interpret = default_interpret() if interpret is None else interpret
         self.accum_dtype = accum_dtype
+        self.mesh = mesh
+        self.client_axis = client_axis
+        if mesh is not None and client_axis not in mesh.axis_names:
+            raise ValueError(
+                f"client_axis {client_axis!r} not in mesh axes {mesh.axis_names}"
+            )
+        self._shards = int(mesh.shape[client_axis]) if mesh is not None else 1
 
         packed = pack_clients(client_data, cfg.B)
         self._x = jnp.asarray(packed.x)
         self._y = jnp.asarray(packed.y) if packed.y is not None else None
         self._counts = jnp.asarray(packed.counts)
         self._spe = jnp.asarray(packed.steps_per_epoch)
+        if mesh is not None:
+            # Replicate the packed pools and the global params across the
+            # client mesh up front. Without this the first round's inputs
+            # are single-device and every later round's are mesh-replicated
+            # (shard_map outputs), costing a second executable and a
+            # first-round relayout.
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+
+            rep = NamedSharding(mesh, P())
+            self.params = jax.device_put(self.params, rep)
+            self._x = jax.device_put(self._x, rep)
+            if self._y is not None:
+                self._y = jax.device_put(self._y, rep)
+            self._counts = jax.device_put(self._counts, rep)
+            self._spe = jax.device_put(self._spe, rep)
         # Keep only the metadata; the numpy pool would otherwise double
         # peak memory for the whole run after its device upload.
         self.packed = packed._replace(x=None, y=None)
-        self._round_jit = jax.jit(
-            partial(
-                _engine_round,
-                loss_fn,
-                E=cfg.E,
-                spe=packed.max_real_steps_per_epoch,
-                B=packed.batch_size,
-                has_labels=self._y is not None,
-                codec=codec,
-                interpret=self.interpret,
-                accum_dtype=jnp.dtype(accum_dtype),
-            ),
-            static_argnames=(),
+        body = partial(
+            _engine_round,
+            loss_fn,
+            E=cfg.E,
+            spe=packed.max_real_steps_per_epoch,
+            B=packed.batch_size,
+            has_labels=self._y is not None,
+            codec=codec,
+            interpret=self.interpret,
+            accum_dtype=jnp.dtype(accum_dtype),
+            axis_name=client_axis if mesh is not None else None,
         )
+        if mesh is not None:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            # Everything replicates except the cohort: ids/valid split
+            # m/D-per-device along the client axis; the psum-finished
+            # aggregation makes the outputs replicated by construction
+            # (check_rep can't see through pallas_call, so it's off).
+            body = shard_map(
+                body,
+                mesh=mesh,
+                in_specs=(P(), P(), P(), P(), P(),
+                          P(client_axis), P(client_axis), P(), P()),
+                out_specs=(P(), P()),
+                check_rep=False,
+            )
+        self._round_jit = jax.jit(body, static_argnames=())
 
     # -- introspection ----------------------------------------------------
 
@@ -277,8 +350,13 @@ class RoundEngine:
         return self._round_jit._cache_size()
 
     def lr_at(self, rnd: int) -> float:
-        lr = self.cfg.lr(rnd) if callable(self.cfg.lr) else self.cfg.lr
-        return float(lr) * self.cfg.lr_decay**rnd
+        """Client lr for round ``rnd``. A callable ``cfg.lr`` is a complete
+        round -> lr schedule and is used verbatim; ``lr_decay`` applies ONLY
+        to a scalar ``cfg.lr`` (regression: decay used to multiply schedules
+        too, so schedule+decay configs decayed twice)."""
+        if callable(self.cfg.lr):
+            return float(self.cfg.lr(rnd))
+        return float(self.cfg.lr) * self.cfg.lr_decay**rnd
 
     # -- the round loop ---------------------------------------------------
 
@@ -286,13 +364,18 @@ class RoundEngine:
         selected = sample_clients(self.rng, self.num_clients, self.cfg.C)
         key = jax.random.PRNGKey(int(self.rng.integers(2**31)))
         lr = jnp.float32(self.lr_at(self.round_idx))
-        return jnp.asarray(selected, jnp.int32), key, lr
+        # Pad to a multiple of the shard count with zero-weight ghosts
+        # (no-op when unsharded: _shards == 1). m is fixed given (K, C), so
+        # the padded cohort shape is static across rounds.
+        ids, valid = pad_cohort(np.asarray(selected), self._shards)
+        return jnp.asarray(ids, jnp.int32), jnp.asarray(valid), key, lr
 
     def round(self) -> Dict[str, float]:
         """One synchronous FedAvg round; returns {'loss': ...}."""
-        ids, key, lr = self._next_round_inputs()
+        ids, valid, key, lr = self._next_round_inputs()
         self.params, loss = self._round_jit(
-            self.params, self._x, self._y, self._counts, self._spe, ids, key, lr
+            self.params, self._x, self._y, self._counts, self._spe,
+            ids, valid, key, lr,
         )
         self.round_idx += 1
         return {"loss": loss}
@@ -304,6 +387,12 @@ class RoundEngine:
         target_acc: Optional[float] = None,
         verbose: bool = False,
     ) -> History:
+        if target_acc is not None and self.eval_fn is None:
+            raise ValueError(
+                "run(target_acc=...) needs an eval_fn to measure accuracy — "
+                "without one the target can never trigger and the run would "
+                "silently do all n_rounds"
+            )
         for i in range(n_rounds):
             t0 = time.time()
             metrics = self.round()
@@ -333,11 +422,52 @@ class RoundEngine:
                 self.history.records.append(rec)
         return self.history
 
+    # -- checkpoint / resume ----------------------------------------------
+
+    def save(self, ckpt_dir) -> str:
+        """Checkpoint (params, round_idx, client-sampling RNG state) via
+        ``checkpoint.io``. The numpy bit-generator state rides in the
+        msgpack metadata as JSON (its 128-bit PCG integers overflow
+        msgpack's int range), so a restored engine reproduces the
+        uninterrupted run's cohort stream bit-for-bit."""
+        import json
+
+        from repro.checkpoint.io import save_checkpoint
+
+        return save_checkpoint(
+            ckpt_dir, self.params, step=self.round_idx,
+            metadata={
+                "round_idx": self.round_idx,
+                "rng_state": json.dumps(self.rng.bit_generator.state),
+            },
+        )
+
+    def restore(self, ckpt_dir, step: Optional[int] = None) -> int:
+        """Restore params + round counter + RNG stream saved by :meth:`save`
+        into this engine (constructed with the same population/config).
+        Returns the restored round index."""
+        import json
+
+        from repro.checkpoint.io import restore_checkpoint
+
+        self.params, meta = restore_checkpoint(ckpt_dir, self.params, step=step)
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+
+            self.params = jax.device_put(
+                self.params, NamedSharding(self.mesh, P())
+            )
+        self.round_idx = int(meta["round_idx"])
+        self.rng.bit_generator.state = json.loads(meta["rng_state"])
+        return self.round_idx
+
     # -- testing hooks -----------------------------------------------------
 
     def materialize_round_batch(self, ids, key):
         """Assemble (batches, step_mask, weights) exactly as the jitted round
-        does — for equivalence tests and the legacy-vs-engine benchmark."""
+        does — for equivalence tests and the legacy-vs-engine benchmark.
+        Always the UNSHARDED view (global slot 0 onward)."""
         return _assemble_batches(
             self._x, self._y, self._counts, self._spe,
             jnp.asarray(ids, jnp.int32), key,
@@ -349,7 +479,8 @@ class RoundEngine:
 # The round body lives at module level so the jit cache key is stable and
 # introspectable; everything shape-like is a closed-over Python int.
 
-def _assemble_batches(px, py, counts, spe_arr, ids, key, *, E, spe, B, has_labels):
+def _assemble_batches(px, py, counts, spe_arr, ids, key, *, E, spe, B,
+                      has_labels, slot0=0):
     m = ids.shape[0]
     n_pad = px.shape[1]
     xs = jnp.take(px, ids, axis=0)                       # (m, n_pad, ...)
@@ -366,15 +497,28 @@ def _assemble_batches(px, py, counts, spe_arr, ids, key, *, E, spe, B, has_label
     # the scan; ``spe`` is the largest REAL per-client step count, which
     # can be one below n_pad // B (the pool keeps ceil rows so no example
     # is truncated).
-    keys = jax.random.split(key, m * E)
-    n_real = jnp.repeat(jnp.take(counts, ids).astype(jnp.int32), E)  # (m*E,)
+    #
+    # Keys derive from the client's GLOBAL cohort slot (``slot0`` + local
+    # index), not from one split over however many clients this call sees:
+    # under cohort sharding each shard assembles only its m/D slice, and
+    # slot-keyed fold_in makes its permutations identical to the ones the
+    # unsharded engine draws for the same clients — the bedrock of the
+    # sharded-vs-unsharded equivalence guarantee.
+    slots = slot0 + jnp.arange(m, dtype=jnp.int32)
+    epochs = jnp.arange(E, dtype=jnp.int32)
+    keys = jax.vmap(
+        lambda s: jax.vmap(
+            lambda e: jax.random.fold_in(jax.random.fold_in(key, s), e)
+        )(epochs)
+    )(slots)                                             # (m, E) keys
+    n_real = jnp.take(counts, ids).astype(jnp.int32)     # (m,)
 
     def draw_order(k, nk):
         u = jax.random.uniform(k, (n_pad,))
         return jnp.argsort(u + 2.0 * (jnp.arange(n_pad) >= nk))
 
-    perm = jax.vmap(draw_order)(keys, n_real)
-    perm = perm.reshape(m, E, n_pad)[:, :, : spe * B].reshape(m, E * spe * B)
+    perm = jax.vmap(jax.vmap(draw_order, in_axes=(0, None)))(keys, n_real)
+    perm = perm[:, :, : spe * B].reshape(m, E * spe * B)
     gather = jax.vmap(lambda rows, p: jnp.take(rows, p, axis=0))
     bx = gather(xs, perm).reshape((m, E * spe, B) + xs.shape[2:])
     by = (
@@ -391,25 +535,36 @@ def _assemble_batches(px, py, counts, spe_arr, ids, key, *, E, spe, B, has_label
 
 
 def _engine_round(
-    loss_fn, params, px, py, counts, spe_arr, ids, key, lr,
-    *, E, spe, B, has_labels, codec, interpret, accum_dtype,
+    loss_fn, params, px, py, counts, spe_arr, ids, valid, key, lr,
+    *, E, spe, B, has_labels, codec, interpret, accum_dtype, axis_name=None,
 ):
+    # Under shard_map ``ids``/``valid`` are this shard's (m/D,) cohort
+    # slice; the shard's global slot offset keys all per-client randomness
+    # so the sharded round replays the unsharded one exactly.
+    m_local = ids.shape[0]
+    slot0 = 0 if axis_name is None else jax.lax.axis_index(axis_name) * m_local
     batch, mask, w = _assemble_batches(
-        px, py, counts, spe_arr, ids, key, E=E, spe=spe, B=B, has_labels=has_labels
+        px, py, counts, spe_arr, ids, key, E=E, spe=spe, B=B,
+        has_labels=has_labels, slot0=slot0,
     )
+    # Ghost cohort-padding clients (valid == 0) keep a real row gather (id
+    # 0) but zero weight, so they vanish from the aggregate and the loss.
+    w = w * valid
     if codec is None:
         step = build_simulation_round_step(
-            loss_fn, interpret=interpret, accum_dtype=accum_dtype
+            loss_fn, interpret=interpret, accum_dtype=accum_dtype,
+            axis_name=axis_name,
         )
         codec_key = None
     else:
         from repro.core.compression import build_compressed_round_step
 
         step = build_compressed_round_step(
-            loss_fn, codec, interpret=interpret, accum_dtype=accum_dtype
+            loss_fn, codec, interpret=interpret, accum_dtype=accum_dtype,
+            axis_name=axis_name,
         )
         # Decorrelate the codec stream from the batch-permutation stream
-        # (which consumed split(key, m*E) above).
+        # (whose keys fold in global cohort slots above).
         codec_key = jax.random.fold_in(key, 0x5EED)
     state, metrics = step(
         RoundState(params), RoundBatch(batch, mask, w, lr=lr, key=codec_key)

@@ -80,21 +80,31 @@ def client_update(
     return params, losses
 
 
-def masked_weighted_loss(losses, step_mask, client_weights):
+def masked_weighted_loss(losses, step_mask, client_weights, *, axis_name=None):
     """Round train-loss metric shared by every round_step implementation:
     mean loss over each client's REAL (unmasked) steps, weighted by client
     example count. One definition — the identity-codec equivalence tests
     require the plain, compressed, and legacy-loop paths to agree
-    bit-for-bit on it."""
-    w = client_weights / jnp.sum(client_weights)
+    bit-for-bit on it.
+
+    ``axis_name``: inside a ``shard_map`` over a client axis, each shard
+    holds only its cohort slice; the numerator/denominator then finish with
+    a ``psum`` so every shard reports the same global loss. Ghost (padding)
+    clients carry weight 0 and drop out of both sums. The unsharded branch
+    keeps the original normalize-then-sum association bit-for-bit."""
     per_client = jnp.sum(losses * step_mask, axis=1) / jnp.maximum(
         jnp.sum(step_mask, axis=1), 1.0
     )
-    return jnp.sum(w * per_client)
+    if axis_name is None:
+        w = client_weights / jnp.sum(client_weights)
+        return jnp.sum(w * per_client)
+    num = jax.lax.psum(jnp.sum(client_weights * per_client), axis_name)
+    den = jax.lax.psum(jnp.sum(client_weights), axis_name)
+    return num / den
 
 
 def server_aggregate(stacked_params, client_weights, *, interpret=None,
-                     accum_dtype=jnp.float32):
+                     accum_dtype=jnp.float32, axis_name=None):
     """w_{t+1} <- sum_k (n_k/n) w^k_{t+1} — Algorithm 1's server line.
 
     ``client_weights`` are RAW example counts n_k; this is the ONE place on
@@ -102,11 +112,26 @@ def server_aggregate(stacked_params, client_weights, *, interpret=None,
     ``tree_fedavg_aggregate`` adapter, whose Pallas kernel asserts the
     normalized contract). The pure-jnp ``tree_weighted_mean`` remains the
     reference oracle in tests. ``interpret=None`` auto-selects the Pallas
-    interpreter off-TPU (kernels do not lower on the CPU backend)."""
-    from repro.kernels.ops import default_interpret, tree_fedavg_aggregate
+    interpreter off-TPU (kernels do not lower on the CPU backend).
+
+    ``axis_name``: cohort-sharded mode. Each shard sees the (m/D, ...) local
+    slice of the stacked client params; the Pallas kernel then runs in
+    partial-sum mode (UNnormalized weights) and a ``psum`` over the named
+    client axis finishes both the weighted sum and the weight total before
+    the single division — see ``ops.sharded_fedavg_aggregate``."""
+    from repro.kernels.ops import (
+        default_interpret,
+        sharded_fedavg_aggregate,
+        tree_fedavg_aggregate,
+    )
 
     if interpret is None:
         interpret = default_interpret()
+    if axis_name is not None:
+        return sharded_fedavg_aggregate(
+            stacked_params, client_weights, axis_name=axis_name,
+            interpret=interpret, accum_dtype=accum_dtype,
+        )
     return tree_fedavg_aggregate(
         stacked_params, client_weights, interpret=interpret,
         accum_dtype=accum_dtype,

@@ -85,9 +85,12 @@ class FederatedTrainer:
         cfg: FedAvgConfig,
         eval_fn: Optional[Callable] = None,
         codec=None,
+        mesh=None,
+        client_axis: str = "clients",
     ):
         self.engine = RoundEngine(
-            loss_fn, init_params, client_data, cfg, eval_fn, codec=codec
+            loss_fn, init_params, client_data, cfg, eval_fn, codec=codec,
+            mesh=mesh, client_axis=client_axis,
         )
         self.loss_fn = loss_fn
         self.client_data = list(client_data)
@@ -124,6 +127,14 @@ class FederatedTrainer:
         target_acc: Optional[float] = None,
         verbose: bool = False,
     ) -> History:
+        # Same guard as RoundEngine.run (duplicated so a caller holding only
+        # the trainer gets the error attributed here, not to engine internals):
+        # without an eval_fn the accuracy target can never fire and the run
+        # would silently do all n_rounds.
+        if target_acc is not None and self.eval_fn is None:
+            raise ValueError(
+                "run(target_acc=...) needs an eval_fn to measure accuracy"
+            )
         return self.engine.run(
             n_rounds, eval_every=eval_every, target_acc=target_acc, verbose=verbose
         )

@@ -10,4 +10,4 @@ from repro.data.partition import (
     partition_unbalanced,
     FederatedDataset,
 )
-from repro.data.batching import batch_iterator, client_epoch_batches
+from repro.data.batching import batch_iterator, client_epoch_batches, pad_cohort

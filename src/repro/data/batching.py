@@ -173,6 +173,30 @@ def pack_clients(
     )
 
 
+def pad_cohort(ids: np.ndarray, multiple: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Pad a sampled cohort to a multiple of the shard count with GHOST
+    clients so ``shard_map`` can split it evenly over the client axis.
+
+    Ghosts reuse client id 0 (any valid row works — their compute is thrown
+    away) and carry validity 0; the engine multiplies the gathered example
+    counts by this mask, so ghosts contribute zero weight to both the
+    aggregation and the loss. The pad count is a pure function of
+    (len(ids), multiple), so cohort shapes stay static across rounds.
+
+    Returns ``(ids_padded, valid)`` with ``valid`` float32 0/1 of the same
+    length.
+    """
+    if multiple < 1:
+        raise ValueError(f"multiple must be >= 1, got {multiple}")
+    ids = np.asarray(ids)
+    pad = (-len(ids)) % multiple
+    padded = np.concatenate([ids, np.zeros(pad, ids.dtype)])
+    valid = np.ones(len(ids) + pad, np.float32)
+    if pad:
+        valid[-pad:] = 0.0
+    return padded, valid
+
+
 def batch_iterator(x, y, batch_size, seed=0, drop_last=True):
     rng = np.random.default_rng(seed)
     n = len(x)

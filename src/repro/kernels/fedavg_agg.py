@@ -79,6 +79,16 @@ def fedavg_aggregate(
     ``server_aggregate``, nowhere else). Checked eagerly when ``weights``
     is concrete; under a surrounding jit trace the check is skipped and the
     caller's contract applies.
+
+    Sanctioned exception — partial-sum mode: the cohort-sharded adapters
+    (``ops.sharded_fedavg_aggregate`` and the quantized analogue) call this
+    kernel per shard with UNnormalized weights, because sum==1 is a
+    property of the full cohort and cannot hold for an (m/D,) slice; they
+    restore the contract globally by psum-ming the partial sums and the
+    weight total before a single division. The kernel body is a plain
+    weighted sum either way. If this check is ever strengthened to run
+    under trace (e.g. checkify), it must exempt — or gain a flag for —
+    that partial-sum mode.
     """
     if not isinstance(weights, jax.core.Tracer):
         s = float(jnp.sum(jnp.asarray(weights, jnp.float32)))

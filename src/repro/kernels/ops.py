@@ -64,6 +64,44 @@ def tree_fedavg_aggregate(stacked_params, weights, *, interpret=False,
     return tree_unravel(spec, avg)
 
 
+def sharded_fedavg_aggregate(stacked_params, weights, *, axis_name,
+                             interpret=False, accum_dtype=jnp.float32,
+                             block_n=None):
+    """Cohort-sharded server aggregation: the partial-sum mode of
+    :func:`tree_fedavg_aggregate` for use INSIDE a ``shard_map`` over a
+    named client axis.
+
+    Each shard holds the local (m/D, ...) slice of the stacked client
+    params and its (m/D,) slice of the RAW example counts n_k. The Pallas
+    kernel runs unchanged over the local slice with UNnormalized weights —
+    a deliberate use of its partial-sum mode (see the note in
+    kernels/fedavg_agg.py): the sum==1 contract is a property of the FULL
+    cohort and cannot hold per shard, so here the kernel computes the
+    plain weighted partial sum, a single ``jax.lax.psum`` finishes both
+    that sum and the weight total across shards, and one division by the
+    global total yields the weighted mean — identical to the unsharded
+    result up to fp32 reassociation.
+
+    The local partial sums are kept in ``accum_dtype`` (fp32 by default)
+    until after the psum — summing partial results in bf16 storage dtype
+    would lose exactly the precision the kernel's fp32 accumulator exists
+    to protect; ``tree_unravel`` casts back to each leaf's storage dtype
+    only at the very end. Ghost (cohort-padding) clients carry weight 0
+    and vanish from both sums.
+    """
+    if block_n is None:
+        block_n = (1 << 20) if interpret else 16384
+    flat, spec = tree_ravel_stacked(stacked_params)
+    w = jnp.asarray(weights, jnp.float32)
+    partial = fedavg_aggregate(
+        flat.astype(accum_dtype), w, interpret=interpret,
+        accum_dtype=accum_dtype, block_n=block_n,
+    )
+    num = jax.lax.psum(partial, axis_name)
+    den = jax.lax.psum(jnp.sum(w), axis_name)
+    return tree_unravel(spec, num / den)
+
+
 def quantized_fedavg_aggregate(codes, lo, scale, weights, *, chunk, levels,
                                interpret=False, accum_dtype=jnp.float32,
                                block_chunks=None):
@@ -87,6 +125,30 @@ def quantized_fedavg_aggregate(codes, lo, scale, weights, *, chunk, levels,
         block_chunks=block_chunks, interpret=interpret,
         accum_dtype=accum_dtype,
     )
+
+
+def sharded_quantized_fedavg_aggregate(codes, lo, scale, weights, *, chunk,
+                                       levels, axis_name, interpret=False,
+                                       accum_dtype=jnp.float32,
+                                       block_chunks=None):
+    """Partial-sum mode of :func:`quantized_fedavg_aggregate` for cohort
+    sharding: inside a ``shard_map`` over ``axis_name``, each shard fuses
+    dequantize + weighted accumulation over its local (m/D, N_pad) slice of
+    the client codes with UNnormalized weights (the Pallas kernel runs
+    unchanged), then one ``psum`` finishes the weighted sum and the weight
+    total before the single division. The kernel already emits
+    ``accum_dtype`` output, so nothing is lost crossing shards."""
+    if block_chunks is None:
+        block_chunks = (1 << 14) if interpret else 32
+    w = jnp.asarray(weights, jnp.float32)
+    partial = quantized_aggregate(
+        codes, lo, scale, w, chunk=chunk, levels=levels,
+        block_chunks=block_chunks, interpret=interpret,
+        accum_dtype=accum_dtype,
+    )
+    num = jax.lax.psum(partial, axis_name)
+    den = jax.lax.psum(jnp.sum(w), axis_name)
+    return num / den
 
 
 def mamba_ssm_scan(dt, Bm, Cm, x, A, h0, *, chunk=0, interpret=False):

@@ -31,6 +31,28 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
 
 
+def make_client_mesh(num_devices=None, axis: str = "clients"):
+    """1-axis mesh over the client dimension for ``RoundEngine(mesh=...)``
+    cohort sharding: a round's m sampled clients run m/D per device, with
+    the Pallas aggregation psum-finished across the axis.
+
+    ``num_devices=None`` takes every visible device. On CPU, force a
+    device count first (before any jax import):
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — the sharded
+    CI lane and ``benchmarks/round_engine.py``'s scaling column do exactly
+    that."""
+    import numpy as np
+
+    devices = jax.devices()
+    n = len(devices) if num_devices is None else int(num_devices)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"client mesh needs {n} devices, have {len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}"
+        )
+    return jax.sharding.Mesh(np.asarray(devices[:n]), (axis,))
+
+
 def make_host_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh over however many (possibly forced) host devices exist —
     used by sharding unit tests."""

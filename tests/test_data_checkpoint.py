@@ -70,6 +70,28 @@ def test_checkpoint_roundtrip(tmp_path, rng):
     assert meta7["round"] == 7
 
 
+def test_checkpoint_roundtrip_bf16_mixed_tree(tmp_path, rng):
+    """Regression: np.savez silently degrades ml_dtypes leaves (bfloat16)
+    to raw void records — they now round-trip viewed as uint16 and are
+    re-viewed through the dtype recorded in index.msgpack."""
+    tree = {
+        "fp32": jnp.asarray(rng.normal(size=(3, 4)).astype(np.float32)),
+        "bf16": jnp.asarray(
+            rng.normal(size=(5,)).astype(np.float32)
+        ).astype(jnp.bfloat16),
+        "nested": {"bf16_2d": jnp.ones((2, 3), jnp.bfloat16) * 1.5},
+    }
+    save_checkpoint(tmp_path, tree, step=1)
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, _ = restore_checkpoint(tmp_path, like)
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(tree)):
+        assert a.dtype == b.dtype
+        # bit-for-bit: compare the raw storage, not a float view
+        np.testing.assert_array_equal(
+            np.asarray(a).view(np.uint8), np.asarray(b).view(np.uint8)
+        )
+
+
 def test_checkpoint_structure_mismatch_raises(tmp_path):
     save_checkpoint(tmp_path, {"a": jnp.zeros(3)}, step=1)
     with pytest.raises(AssertionError):

@@ -171,7 +171,8 @@ def test_engine_round_matches_reference_on_same_batches(rng):
     params = model.init(jax.random.PRNGKey(2))
     eng = RoundEngine(model.loss, params, clients,
                       FedAvgConfig(C=0.75, E=2, B=8, lr=0.2, seed=7))
-    ids, key, lr = eng._next_round_inputs()
+    ids, valid, key, lr = eng._next_round_inputs()
+    np.testing.assert_array_equal(np.asarray(valid), 1.0)  # unsharded: no ghosts
     batch, mask, w = eng.materialize_round_batch(ids, key)
 
     upd = jax.vmap(lambda b, msk: client_update(model.loss, params, b, msk, lr))
@@ -179,7 +180,7 @@ def test_engine_round_matches_reference_on_same_batches(rng):
     want = tree_weighted_mean(client_params, w)
 
     got, loss = eng._round_jit(
-        eng.params, eng._x, eng._y, eng._counts, eng._spe, ids, key, lr
+        eng.params, eng._x, eng._y, eng._counts, eng._spe, ids, valid, key, lr
     )
     assert np.isfinite(float(loss))
     for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
@@ -238,6 +239,87 @@ def test_engine_epoch_sampling_without_replacement(rng):
         epoch = np.asarray(bx[0, e * spe : e * spe + 5]).reshape(-1)
         # 5 active steps x B=5 = 25 rows: every unique example exactly once
         assert len(set(epoch.tolist())) == 25, sorted(epoch.tolist())
+
+
+# ---------------------------------------------------------------------------
+# lr schedule / early-stop guard regressions
+# ---------------------------------------------------------------------------
+
+def _tiny_engine(rng, cfg, **kw):
+    clients = _unbalanced_noniid_clients(rng, [16, 24])
+    model = mnist_2nn(n_classes=5, d_in=20)
+    return RoundEngine(model.loss, model.init(jax.random.PRNGKey(0)), clients,
+                       cfg, **kw)
+
+
+def test_lr_at_scalar_applies_decay(rng):
+    eng = _tiny_engine(rng, FedAvgConfig(C=1.0, lr=0.2, lr_decay=0.5, seed=0))
+    assert eng.lr_at(0) == pytest.approx(0.2)
+    assert eng.lr_at(3) == pytest.approx(0.2 * 0.5**3)
+
+
+def test_lr_at_schedule_not_double_decayed(rng):
+    """Regression: a callable cfg.lr was additionally multiplied by
+    lr_decay**round, so schedule+decay configs decayed twice."""
+    sched = lambda r: 0.2 * 0.9**r
+    eng = _tiny_engine(rng, FedAvgConfig(C=1.0, lr=sched, lr_decay=0.5, seed=0))
+    assert eng.lr_at(0) == pytest.approx(0.2)
+    assert eng.lr_at(4) == pytest.approx(0.2 * 0.9**4)   # NOT * 0.5**4
+
+
+def test_run_target_acc_without_eval_fn_raises(rng):
+    """Regression: target_acc with eval_fn=None silently never early-stopped
+    (the accuracy is never measured) and ran all n_rounds."""
+    from repro.core.simulation import FederatedTrainer
+
+    eng = _tiny_engine(rng, FedAvgConfig(C=1.0, E=1, B=8, lr=0.1, seed=0))
+    with pytest.raises(ValueError, match="eval_fn"):
+        eng.run(3, target_acc=0.9)
+    assert eng.round_idx == 0  # raised at call time, before any round ran
+
+    clients = _unbalanced_noniid_clients(rng, [16, 24])
+    model = mnist_2nn(n_classes=5, d_in=20)
+    tr = FederatedTrainer(model.loss, model.init(jax.random.PRNGKey(0)),
+                          clients, FedAvgConfig(C=1.0, E=1, B=8, lr=0.1, seed=0))
+    with pytest.raises(ValueError, match="eval_fn"):
+        tr.run(3, target_acc=0.9)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume
+# ---------------------------------------------------------------------------
+
+def test_engine_checkpoint_resume_bit_for_bit(rng, tmp_path):
+    """Save (params, round_idx, rng state) mid-run, restore into a FRESH
+    engine, and the resumed run must reproduce the uninterrupted run's
+    params and per-round losses bit-for-bit — the client sampling stream,
+    per-round PRNG keys, and lr schedule all resume where they left off."""
+    sizes = [7, 64, 13, 40, 25, 9]
+    cfg = FedAvgConfig(C=0.5, E=2, B=10, lr=0.1, lr_decay=0.99, seed=11)
+    model = mnist_2nn(n_classes=5, d_in=20)
+
+    def fresh():
+        r = np.random.default_rng(123)
+        return RoundEngine(model.loss, model.init(jax.random.PRNGKey(4)),
+                           _unbalanced_noniid_clients(r, sizes), cfg)
+
+    straight = fresh()
+    h_straight = straight.run(6)
+
+    interrupted = fresh()
+    interrupted.run(3)
+    interrupted.save(tmp_path)
+
+    resumed = fresh()
+    assert resumed.restore(tmp_path) == 3
+    h_resumed = resumed.run(3)
+
+    assert [r.train_loss for r in h_resumed.records] == [
+        r.train_loss for r in h_straight.records[3:]
+    ]
+    for a, b in zip(jax.tree.leaves(resumed.params),
+                    jax.tree.leaves(straight.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 # ---------------------------------------------------------------------------

@@ -61,5 +61,15 @@ def run_setting(model_name, clients, test, cfg, rounds, target, flatten=True):
     return r, best, wall, h
 
 
+# Every emit() also lands here so benchmarks/run.py --json can write the
+# machine-readable BENCH_<pr>.json snapshot (perf trajectory across PRs).
+ROWS = []
+
+
 def emit(name, us_per_call, derived):
+    ROWS.append({
+        "name": name,
+        "us_per_call": float(us_per_call),
+        "derived": str(derived),
+    })
     print(f"{name},{us_per_call:.1f},{derived}")

@@ -121,6 +121,71 @@ def scaling(quick: bool = True) -> None:
                  f"compilations={eng.num_compilations}")
 
 
+def _overhead_bound_2nn():
+    """The dispatch-bound endpoint of the 2nn regime: equal tiny clients
+    with B = n_k (one masked-in SGD step per client per round) and E = 1,
+    so the round body is a handful of device ops and the per-round cost is
+    dominated by exactly what supersteps amortize — host-side cohort/key
+    staging, executable dispatch, and the per-round loss sync."""
+    rng = np.random.default_rng(0)
+    sizes = [16] * 8
+    clients = [
+        (rng.normal(size=(n, 16)).astype(np.float32),
+         rng.integers(0, 5, n).astype(np.int32))
+        for n in sizes
+    ]
+    return clients, mnist_2nn(n_classes=5, d_in=16), \
+        FedAvgConfig(C=0.25, E=1, B=16, lr=0.1, seed=0)
+
+
+def superstep(quick: bool = True) -> None:
+    """Dispatch-amortization column: per-round wall time of the SAME
+    device-sampling engine at rounds_per_step R in {1, 5, 20} (R=1 is the
+    per-round dispatch baseline — one host round trip per round), 2nn
+    plain and q8 codec paths, on the overhead-bound config above.
+
+    Gate: R=20 must beat R=1 by >=2x on the plain path in quick mode —
+    the acceptance bar for the superstep optimization. Timings take the
+    min over a few trials to shrug off CI-box noise; each R gets a fresh
+    engine so the compile-count column stays per-configuration.
+
+        PYTHONPATH=src python -m benchmarks.run --only round_engine_superstep
+    """
+    from repro.core.compression import quantize_codec
+
+    clients, model, cfg = _overhead_bound_2nn()
+    params = model.init(jax.random.PRNGKey(0))
+    rounds = 20 if quick else 100
+    trials = 5 if quick else 7
+    gate = None
+    for codec_name, codec in [("plain", None), ("q8", quantize_codec(8, chunk=256))]:
+        base_t = None
+        for R in (1, 5, 20):
+            eng = RoundEngine(model.loss, params, clients, cfg, codec=codec,
+                              device_sampling=True)
+            eng.run(R, rounds_per_step=R)  # warm the executable
+            best = float("inf")
+            for _ in range(trials):
+                t0 = time.perf_counter()
+                eng.run(rounds, rounds_per_step=R)
+                best = min(best, (time.perf_counter() - t0) / rounds)
+            base_t = best if R == 1 else base_t
+            speedup = base_t / max(best, 1e-12)
+            emit(f"round_engine/superstep/2nn/{codec_name}/R{R}", best * 1e6,
+                 f"speedup_vs_R1={speedup:.2f}x;"
+                 f"compilations={eng.num_compilations}")
+            if codec_name == "plain" and R == 20:
+                gate = speedup
+    ok = gate is not None and gate >= 2.0
+    emit("round_engine/superstep/gate", 0.0,
+         f"R20_plain={gate:.2f}x;required=2.00x;{'pass' if ok else 'FAIL'}")
+    if not ok:
+        raise AssertionError(
+            f"superstep gate: R=20 must amortize per-round dispatch >=2x on "
+            f"the overhead-bound 2nn config, got {gate:.2f}x"
+        )
+
+
 def main(quick: bool = True) -> None:
     clients = _population(quick)
     rounds = 5 if quick else 20

@@ -1,17 +1,24 @@
 """Benchmark harness entrypoint: one function per paper table/figure plus
 the kernel microbenches and the roofline report.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only table2,fig1]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table2,fig1] \
+        [--json BENCH_pr4.json]
 
 Prints ``name,us_per_call,derived`` CSV lines (# lines are commentary).
+``--json PATH`` additionally writes every emitted row as machine-readable
+JSON ({rows, suites, failed, quick}) so the perf trajectory is tracked
+across PRs — CI smokes the superstep suite this way into BENCH_<pr>.json.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
+from pathlib import Path
 
+from benchmarks import common
 from benchmarks import (
     compression,
     fig1_averaging,
@@ -36,6 +43,7 @@ SUITES = {
     "roofline": roofline_report.main,
     "round_engine": round_engine.main,
     "round_engine_scaling": round_engine.scaling,
+    "round_engine_superstep": round_engine.superstep,
     "compression": compression.main,
 }
 
@@ -44,6 +52,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale budgets")
     ap.add_argument("--only", default=None, help="comma list of suite names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write all emitted rows as machine-readable JSON "
+                         "(e.g. BENCH_pr4.json)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(SUITES)
     print("name,us_per_call,derived")
@@ -57,6 +68,14 @@ def main() -> None:
             failed.append(name)
             traceback.print_exc()
         print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
+    if args.json:
+        Path(args.json).write_text(json.dumps({
+            "rows": common.ROWS,
+            "suites": names,
+            "failed": failed,
+            "quick": not args.full,
+        }, indent=2) + "\n")
+        print(f"# wrote {len(common.ROWS)} rows to {args.json}")
     if failed:
         print(f"# FAILED suites: {failed}")
         sys.exit(1)

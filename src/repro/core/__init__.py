@@ -3,6 +3,7 @@ from repro.core.fedavg import (
     client_update,
     server_aggregate,
     sample_clients,
+    sample_clients_device,
     fedavg_round,
 )
 from repro.core.engine import (

@@ -325,6 +325,12 @@ def build_compressed_round_step(loss_fn, codec: Codec, *,
     finishes with a psum over ``axis_name``). Losses are reduced with the
     same masked, count-weighted formula as ``build_simulation_round_step``,
     so an identity codec reproduces the plain pipeline to fp32 tolerance.
+
+    Supersteps compose from OUTSIDE: ``RoundEngine``'s ``lax.scan``-fused
+    multi-round executable calls this round step once per scan iteration
+    with a fresh ``batch.key`` split from the scan carry, so nothing here
+    is loop-aware — the codec stream stays per-round keyed (and
+    superstep(R) == R per-round calls, see tests/test_engine_superstep.py).
     """
     from repro.core.fedavg import client_update, masked_weighted_loss
 

@@ -47,6 +47,21 @@ pools and params replicated, cohorts padded with zero-weight ghost clients
 mode finished by one ``psum`` (``ops.sharded_fedavg_aggregate``). All
 per-client randomness is keyed by GLOBAL cohort slot, so sharded and
 unsharded runs match round for round (tests/test_engine_sharded.py).
+
+Supersteps
+----------
+The third and final layer of the static-shape pipeline (PR 1 fused the
+round body, PR 2 the codec, this fuses the LOOP): with
+``device_sampling=True``, ``run(..., rounds_per_step=R)`` compiles a
+``jax.lax.scan`` over R full rounds — on-device cohort draw
+(``fedavg.sample_clients_device``), batch assembly, ClientUpdate,
+aggregation — into ONE buffer-donating executable, so the host pays one
+dispatch and one sync per R rounds instead of per round. The cohort PRNG
+key rides in the scan carry and is persisted by ``save``/``restore``; the
+lr schedule is precomputed as an (R,) array scanned alongside. Composes
+with ``codec=`` (the scan wraps the compressed round step) and ``mesh=``
+(the scan runs INSIDE the ``shard_map``, so aggregation stays psum-finished
+per round). See docs/engine.md "Supersteps".
 """
 from __future__ import annotations
 
@@ -74,9 +89,10 @@ from repro.core.fedavg import (
     client_update,
     masked_weighted_loss,
     sample_clients,
+    sample_clients_device,
     server_aggregate,
 )
-from repro.data.batching import pack_clients, pad_cohort
+from repro.data.batching import pack_clients, pad_cohort, pad_cohort_device
 from repro.kernels.ops import default_interpret
 
 
@@ -265,12 +281,23 @@ class RoundEngine:
         accum_dtype=jnp.float32,
         mesh=None,
         client_axis: str = "clients",
+        device_sampling: bool = False,
     ):
         self.loss_fn = loss_fn
-        self.params = init_params
+        # Private copy: the round executables donate the params buffer
+        # (in-place server update), which would otherwise delete the
+        # caller's init_params array out from under them.
+        self.params = jax.tree.map(jnp.array, init_params)
         self.cfg = cfg
         self.eval_fn = eval_fn
         self.rng = np.random.default_rng(cfg.seed)
+        # Cohort/stream state for the two sampling modes. The numpy rng is
+        # the legacy per-round stream; sample_key seeds the on-device
+        # stream (device_sampling=True and all superstep runs) — a NEW
+        # stream: same distribution, different realizations for the same
+        # seed (docs/engine.md). Both are persisted by save/restore.
+        self.device_sampling = bool(device_sampling)
+        self.sample_key = jax.random.PRNGKey(cfg.seed)
         self.round_idx = 0
         self.history = History()
         self.codec = codec
@@ -300,6 +327,7 @@ class RoundEngine:
 
             rep = NamedSharding(mesh, P())
             self.params = jax.device_put(self.params, rep)
+            self.sample_key = jax.device_put(self.sample_key, rep)
             self._x = jax.device_put(self._x, rep)
             if self._y is not None:
                 self._y = jax.device_put(self._y, rep)
@@ -308,9 +336,10 @@ class RoundEngine:
         # Keep only the metadata; the numpy pool would otherwise double
         # peak memory for the whole run after its device upload.
         self.packed = packed._replace(x=None, y=None)
-        body = partial(
-            _engine_round,
-            loss_fn,
+        # m is a pure function of (K, C), so cohort shapes are static; the
+        # device sampler needs it as a Python int.
+        self._m = max(int(round(cfg.C * packed.num_clients)), 1)
+        shape_kw = dict(
             E=cfg.E,
             spe=packed.max_real_steps_per_epoch,
             B=packed.batch_size,
@@ -319,6 +348,11 @@ class RoundEngine:
             interpret=self.interpret,
             accum_dtype=jnp.dtype(accum_dtype),
             axis_name=client_axis if mesh is not None else None,
+        )
+        body = partial(_engine_round, loss_fn, **shape_kw)
+        sbody = partial(
+            _engine_superstep, loss_fn,
+            K=packed.num_clients, m=self._m, shards=self._shards, **shape_kw,
         )
         if mesh is not None:
             from jax.experimental.shard_map import shard_map
@@ -336,7 +370,27 @@ class RoundEngine:
                 out_specs=(P(), P()),
                 check_rep=False,
             )
-        self._round_jit = jax.jit(body, static_argnames=())
+            # Supersteps scan INSIDE the shard_map: every input (pools,
+            # params, key, lr schedule) is replicated, each shard slices
+            # its own m/D cohort chunk per round from the replicated
+            # on-device draw, and the per-round psum keeps the aggregation
+            # exactly as in the per-round path.
+            sbody = shard_map(
+                sbody,
+                mesh=mesh,
+                in_specs=(P(),) * 7,
+                out_specs=(P(), P(), P()),
+                check_rep=False,
+            )
+        # Buffer donation: params are dead the moment a round returns the
+        # new global params (same shapes/dtypes), so the server update is
+        # in-place instead of allocating a fresh param tree every round.
+        # The superstep additionally donates the scan carry's PRNG key.
+        # The undonated bodies stay reachable for tests/benchmarks.
+        self._round_body = body
+        self._superstep_body = sbody
+        self._round_jit = jax.jit(body, donate_argnums=(0,))
+        self._superstep_jit = jax.jit(sbody, donate_argnums=(0, 1))
 
     # -- introspection ----------------------------------------------------
 
@@ -346,8 +400,12 @@ class RoundEngine:
 
     @property
     def num_compilations(self) -> int:
-        """Distinct executables behind the round loop (jax.jit cache size)."""
-        return self._round_jit._cache_size()
+        """Distinct executables behind the round loop — the jax.jit cache
+        sizes of the per-round executable and the superstep (scan-of-R)
+        executable combined. A run that mixes one superstep length with
+        per-round calls stays at 2; a ragged final chunk (n_rounds not a
+        multiple of R) adds one scan-of-remainder executable."""
+        return self._round_jit._cache_size() + self._superstep_jit._cache_size()
 
     def lr_at(self, rnd: int) -> float:
         """Client lr for round ``rnd``. A callable ``cfg.lr`` is a complete
@@ -361,9 +419,19 @@ class RoundEngine:
     # -- the round loop ---------------------------------------------------
 
     def _next_round_inputs(self):
+        lr = jnp.float32(self.lr_at(self.round_idx))
+        if self.device_sampling:
+            # The on-device stream, advanced exactly as one iteration of
+            # the superstep scan advances its carry — that identity is what
+            # makes superstep(R) == R x round() hold round for round
+            # (tests/test_engine_superstep.py).
+            k_cohort, k_data, k_next = jax.random.split(self.sample_key, 3)
+            self.sample_key = k_next
+            ids = sample_clients_device(k_cohort, self.num_clients, self._m)
+            ids, valid = pad_cohort_device(ids, self._shards)
+            return ids, valid, k_data, lr
         selected = sample_clients(self.rng, self.num_clients, self.cfg.C)
         key = jax.random.PRNGKey(int(self.rng.integers(2**31)))
-        lr = jnp.float32(self.lr_at(self.round_idx))
         # Pad to a multiple of the shard count with zero-weight ghosts
         # (no-op when unsharded: _shards == 1). m is fixed given (K, C), so
         # the padded cohort shape is static across rounds.
@@ -380,26 +448,84 @@ class RoundEngine:
         self.round_idx += 1
         return {"loss": loss}
 
+    def _resolve_rounds_per_step(
+        self, rounds_per_step, n_rounds: int, eval_every: int
+    ) -> int:
+        """``None`` auto-selects: legacy numpy-stream engines stay
+        per-round; device-sampling engines superstep at the evaluation
+        granularity (``eval_every``, the most often the host needs control
+        back), or the whole run when there is nothing to evaluate."""
+        if rounds_per_step is None:
+            if not self.device_sampling:
+                return 1
+            return max(1, int(eval_every)) if self.eval_fn is not None \
+                else max(1, int(n_rounds))
+        R = int(rounds_per_step)
+        if R < 1:
+            raise ValueError(f"rounds_per_step must be >= 1, got {rounds_per_step}")
+        if R > 1 and not self.device_sampling:
+            raise ValueError(
+                "rounds_per_step > 1 needs RoundEngine(device_sampling=True): "
+                "the fused multi-round executable draws cohorts on device "
+                "from the jax PRNG stream, which this engine's legacy numpy "
+                "stream cannot feed without a per-round host sync"
+            )
+        return R
+
+    def _superstep(self, r: int) -> np.ndarray:
+        """Advance r rounds in ONE dispatch; returns the (r,) per-round
+        losses, synced. The lr schedule is precomputed host-side (handles
+        both scalar-decay and callable cfg.lr), the cohort key rides in the
+        scan carry, and params + key buffers are donated."""
+        lrs = jnp.asarray(
+            [self.lr_at(self.round_idx + i) for i in range(r)], jnp.float32
+        )
+        self.params, self.sample_key, losses = self._superstep_jit(
+            self.params, self.sample_key, self._x, self._y, self._counts,
+            self._spe, lrs,
+        )
+        losses = np.asarray(jax.block_until_ready(losses))
+        self.round_idx += r
+        return losses
+
     def run(
         self,
         n_rounds: int,
         eval_every: int = 1,
         target_acc: Optional[float] = None,
         verbose: bool = False,
+        rounds_per_step: Optional[int] = None,
     ) -> History:
+        """Run ``n_rounds`` of Algorithm 1.
+
+        ``rounds_per_step=R`` (device-sampling engines) fuses R rounds per
+        host dispatch via the superstep executable; evaluation and
+        ``target_acc`` early-stopping then happen at R-round granularity
+        (chunk boundaries), and each round's ``wall_s`` is the amortized
+        chunk time / R. ``None`` auto-selects (see
+        :meth:`_resolve_rounds_per_step`)."""
         if target_acc is not None and self.eval_fn is None:
             raise ValueError(
                 "run(target_acc=...) needs an eval_fn to measure accuracy — "
                 "without one the target can never trigger and the run would "
                 "silently do all n_rounds"
             )
+        R = self._resolve_rounds_per_step(rounds_per_step, n_rounds, eval_every)
+        if R > 1:
+            return self._run_supersteps(
+                n_rounds, R, eval_every, target_acc, verbose
+            )
         for i in range(n_rounds):
-            t0 = time.time()
+            t0 = time.perf_counter()
             metrics = self.round()
+            # Honest per-round timing: stop the clock only after the
+            # round's outputs are synced — once dispatch is async, the
+            # un-synced time would be a dispatch latency, not a round time.
+            loss = jax.block_until_ready(metrics["loss"])
             rec = RoundRecord(
                 round=self.round_idx,
-                train_loss=float(metrics["loss"]),
-                wall_s=time.time() - t0,
+                train_loss=float(loss),
+                wall_s=time.perf_counter() - t0,
             )
             # i, not self.round_idx, for the last-round check: round_idx is
             # cumulative across run() calls, so a second run(n) would never
@@ -422,14 +548,58 @@ class RoundEngine:
                 self.history.records.append(rec)
         return self.history
 
+    def _run_supersteps(
+        self, n_rounds, R, eval_every, target_acc, verbose
+    ) -> History:
+        done = 0
+        while done < n_rounds:
+            r = min(R, n_rounds - done)
+            t0 = time.perf_counter()
+            losses = self._superstep(r)  # blocks on the chunk's outputs
+            chunk_s = time.perf_counter() - t0
+            done += r
+            for j in range(r):
+                self.history.records.append(RoundRecord(
+                    round=self.round_idx - r + j + 1,
+                    train_loss=float(losses[j]),
+                    # Amortized accounting: the host observes one synced
+                    # chunk, so each round is charged chunk_time / r.
+                    wall_s=chunk_s / r,
+                ))
+            rec = self.history.records[-1]
+            # Evaluate whenever this chunk CROSSED an eval point (not only
+            # when it lands exactly on a multiple): with R misaligned to
+            # eval_every — or round_idx starting non-aligned after a prior
+            # run()/restore() — the exact-multiple check would skip every
+            # mid-run eval and target_acc could overshoot unboundedly
+            # instead of by at most R-1 rounds.
+            crossed = (
+                self.round_idx // eval_every > (self.round_idx - r) // eval_every
+            )
+            if self.eval_fn is not None and (crossed or done >= n_rounds):
+                ev = self.eval_fn(self.params)
+                rec.test_acc = float(ev["acc"])
+                rec.test_loss = float(ev.get("loss", np.nan))
+                if verbose:
+                    print(
+                        f"round {self.round_idx:5d} loss {rec.train_loss:.4f} "
+                        f"test_acc {rec.test_acc:.4f}"
+                    )
+                if target_acc is not None and rec.test_acc >= target_acc:
+                    break
+        return self.history
+
     # -- checkpoint / resume ----------------------------------------------
 
     def save(self, ckpt_dir) -> str:
         """Checkpoint (params, round_idx, client-sampling RNG state) via
         ``checkpoint.io``. The numpy bit-generator state rides in the
         msgpack metadata as JSON (its 128-bit PCG integers overflow
-        msgpack's int range), so a restored engine reproduces the
-        uninterrupted run's cohort stream bit-for-bit."""
+        msgpack's int range); the on-device sampling key (the superstep
+        scan carry) rides as its raw uint32 words. Restoring both means a
+        resumed engine reproduces the uninterrupted run's cohort stream
+        bit-for-bit in either sampling mode — including resuming at a
+        superstep boundary mid-run."""
         import json
 
         from repro.checkpoint.io import save_checkpoint
@@ -439,6 +609,8 @@ class RoundEngine:
             metadata={
                 "round_idx": self.round_idx,
                 "rng_state": json.dumps(self.rng.bit_generator.state),
+                "sample_key": [int(v) for v in np.asarray(self.sample_key)],
+                "device_sampling": self.device_sampling,
             },
         )
 
@@ -450,16 +622,33 @@ class RoundEngine:
 
         from repro.checkpoint.io import restore_checkpoint
 
-        self.params, meta = restore_checkpoint(ckpt_dir, self.params, step=step)
+        restored, meta = restore_checkpoint(ckpt_dir, self.params, step=step)
+        if "device_sampling" in meta and (
+            bool(meta["device_sampling"]) != self.device_sampling
+        ):
+            # Raise BEFORE mutating any engine state: a half-applied
+            # restore would be worse than a refused one.
+            raise ValueError(
+                f"checkpoint was written by a device_sampling="
+                f"{bool(meta['device_sampling'])} engine but this engine has "
+                f"device_sampling={self.device_sampling} — resuming across "
+                "sampling modes would silently continue with a different "
+                "cohort stream and break bit-for-bit resume"
+            )
+        self.params = restored
+        self.round_idx = int(meta["round_idx"])
+        self.rng.bit_generator.state = json.loads(meta["rng_state"])
+        if "sample_key" in meta:  # absent in pre-superstep checkpoints
+            self.sample_key = jnp.asarray(
+                np.asarray(meta["sample_key"], np.uint32)
+            )
         if self.mesh is not None:
             from jax.sharding import NamedSharding
             from jax.sharding import PartitionSpec as P
 
-            self.params = jax.device_put(
-                self.params, NamedSharding(self.mesh, P())
-            )
-        self.round_idx = int(meta["round_idx"])
-        self.rng.bit_generator.state = json.loads(meta["rng_state"])
+            rep = NamedSharding(self.mesh, P())
+            self.params = jax.device_put(self.params, rep)
+            self.sample_key = jax.device_put(self.sample_key, rep)
         return self.round_idx
 
     # -- testing hooks -----------------------------------------------------
@@ -570,3 +759,44 @@ def _engine_round(
         RoundState(params), RoundBatch(batch, mask, w, lr=lr, key=codec_key)
     )
     return state.params, metrics["loss"]
+
+
+def _engine_superstep(
+    loss_fn, params, key, px, py, counts, spe_arr, lrs,
+    *, K, m, shards, E, spe, B, has_labels, codec, interpret, accum_dtype,
+    axis_name=None,
+):
+    """R = len(lrs) full rounds fused into one ``lax.scan``: per round, the
+    carry key splits into (cohort draw, data/codec key, next carry) exactly
+    as the eager ``_next_round_inputs`` device branch does, the cohort is
+    drawn on device (``sample_clients_device`` + static ghost padding), and
+    ``_engine_round`` — the identical per-round body, codec and all — runs
+    on it. Returns (params, advanced key, (R,) per-round losses).
+
+    Under cohort sharding this whole function sits INSIDE the shard_map:
+    every shard replays the (replicated) cohort draw and slices its own
+    m/D chunk, so the per-round psum-finished aggregation and the
+    global-slot randomness keying are untouched — sharded supersteps match
+    unsharded supersteps for the same reason sharded rounds match
+    unsharded rounds."""
+    m_pad = m + (-m) % shards
+    m_local = m_pad // shards
+
+    def one_round(carry, lr):
+        p, k = carry
+        k_cohort, k_data, k_next = jax.random.split(k, 3)
+        ids = sample_clients_device(k_cohort, K, m)
+        ids, valid = pad_cohort_device(ids, shards)
+        if axis_name is not None:
+            d = jax.lax.axis_index(axis_name)
+            ids = jax.lax.dynamic_slice_in_dim(ids, d * m_local, m_local)
+            valid = jax.lax.dynamic_slice_in_dim(valid, d * m_local, m_local)
+        new_p, loss = _engine_round(
+            loss_fn, p, px, py, counts, spe_arr, ids, valid, k_data, lr,
+            E=E, spe=spe, B=B, has_labels=has_labels, codec=codec,
+            interpret=interpret, accum_dtype=accum_dtype, axis_name=axis_name,
+        )
+        return (new_p, k_next), loss
+
+    (params, key), losses = jax.lax.scan(one_round, (params, key), lrs)
+    return params, key, losses

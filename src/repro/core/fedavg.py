@@ -55,6 +55,22 @@ def sample_clients(rng: np.random.Generator, n_clients: int, C: float) -> np.nda
     return rng.choice(n_clients, size=m, replace=False)
 
 
+def sample_clients_device(key, n_clients: int, m: int) -> jnp.ndarray:
+    """On-device S_t draw: m distinct client ids, uniform without
+    replacement — argsort of keyed uniforms over the K clients, keep the
+    first m. Pure and traceable, so the whole cohort draw lives inside the
+    round executable (``RoundEngine`` supersteps scan it over R rounds with
+    the key threaded through the carry).
+
+    This is a DIFFERENT stream from :func:`sample_clients`' numpy draw:
+    same distribution, different realizations for the same seed (see
+    docs/engine.md "Supersteps" for the seed-compatibility notes). ``m`` is
+    static — compute it host-side as ``max(round(C * K), 1)``, exactly as
+    the numpy sampler does."""
+    u = jax.random.uniform(key, (n_clients,))
+    return jnp.argsort(u)[:m].astype(jnp.int32)
+
+
 def client_update(
     loss_fn: Callable,
     params,

@@ -87,10 +87,12 @@ class FederatedTrainer:
         codec=None,
         mesh=None,
         client_axis: str = "clients",
+        device_sampling: bool = False,
     ):
         self.engine = RoundEngine(
             loss_fn, init_params, client_data, cfg, eval_fn, codec=codec,
             mesh=mesh, client_axis=client_axis,
+            device_sampling=device_sampling,
         )
         self.loss_fn = loss_fn
         self.client_data = list(client_data)
@@ -126,6 +128,7 @@ class FederatedTrainer:
         eval_every: int = 1,
         target_acc: Optional[float] = None,
         verbose: bool = False,
+        rounds_per_step: Optional[int] = None,
     ) -> History:
         # Same guard as RoundEngine.run (duplicated so a caller holding only
         # the trainer gets the error attributed here, not to engine internals):
@@ -136,7 +139,8 @@ class FederatedTrainer:
                 "run(target_acc=...) needs an eval_fn to measure accuracy"
             )
         return self.engine.run(
-            n_rounds, eval_every=eval_every, target_acc=target_acc, verbose=verbose
+            n_rounds, eval_every=eval_every, target_acc=target_acc,
+            verbose=verbose, rounds_per_step=rounds_per_step,
         )
 
 

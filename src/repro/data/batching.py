@@ -197,6 +197,28 @@ def pad_cohort(ids: np.ndarray, multiple: int) -> Tuple[np.ndarray, np.ndarray]:
     return padded, valid
 
 
+def pad_cohort_device(ids, multiple: int):
+    """Traceable analogue of :func:`pad_cohort`: same ghost-client scheme
+    (id 0, validity 0), but as static jnp slicing/concatenation so the pad
+    happens INSIDE the round executable — the superstep path samples
+    cohorts on device (``core.fedavg.sample_clients_device``) and can't
+    round-trip through numpy. The pad count is a pure function of the
+    static ``(len(ids), multiple)``, so shapes stay fixed across rounds and
+    the two implementations produce identical (ids, valid) for identical
+    inputs."""
+    import jax.numpy as jnp
+
+    if multiple < 1:
+        raise ValueError(f"multiple must be >= 1, got {multiple}")
+    m = ids.shape[0]
+    pad = (-m) % multiple
+    valid = np.ones(m + pad, np.float32)
+    if pad:
+        ids = jnp.concatenate([ids, jnp.zeros(pad, ids.dtype)])
+        valid[-pad:] = 0.0
+    return ids, jnp.asarray(valid)
+
+
 def batch_iterator(x, y, batch_size, seed=0, drop_last=True):
     rng = np.random.default_rng(seed)
     n = len(x)

@@ -52,10 +52,9 @@ def tree_fedavg_aggregate(stacked_params, weights, *, interpret=False,
     on the kernel path that normalizes them to sum to 1 (the kernel asserts
     that contract). ``accum_dtype`` is the in-kernel reduction dtype — fp32
     by default regardless of storage dtype (see kernels/fedavg_agg.py)."""
-    if block_n is None:
-        # 16k columns fits VMEM on hardware; the Python interpreter has no
-        # VMEM and pays per grid cell, so use far fewer, larger blocks there.
-        block_n = (1 << 20) if interpret else 16384
+    # block_n=None lets the kernel pick the backend policy: 16k VMEM tiles
+    # on hardware, a single grid step under the per-grid-cell-cost
+    # interpreter (see kernels.fedavg_agg.interpret_block_n).
     flat, spec = tree_ravel_stacked(stacked_params)
     w = jnp.asarray(weights, jnp.float32)
     w = w / jnp.sum(w)
@@ -89,8 +88,6 @@ def sharded_fedavg_aggregate(stacked_params, weights, *, axis_name,
     only at the very end. Ghost (cohort-padding) clients carry weight 0
     and vanish from both sums.
     """
-    if block_n is None:
-        block_n = (1 << 20) if interpret else 16384
     flat, spec = tree_ravel_stacked(stacked_params)
     w = jnp.asarray(weights, jnp.float32)
     partial = fedavg_aggregate(
@@ -113,11 +110,8 @@ def quantized_fedavg_aggregate(codes, lo, scale, weights, *, chunk, levels,
     asserts the normalized contract, mirroring ``tree_fedavg_aggregate``).
     Returns the (N_pad,) fp32 averaged delta; callers slice to the real N.
     """
-    if block_chunks is None:
-        # Same policy as tree_fedavg_aggregate: VMEM-sized tiles on
-        # hardware, few huge blocks under the per-grid-cell-cost Python
-        # interpreter.
-        block_chunks = (1 << 14) if interpret else 32
+    # block_chunks=None defers to the kernel's backend policy (VMEM tiles
+    # on hardware, one right-sized block under the interpreter).
     w = jnp.asarray(weights, jnp.float32)
     w = w / jnp.sum(w)
     return quantized_aggregate(
@@ -138,8 +132,6 @@ def sharded_quantized_fedavg_aggregate(codes, lo, scale, weights, *, chunk,
     unchanged), then one ``psum`` finishes the weighted sum and the weight
     total before the single division. The kernel already emits
     ``accum_dtype`` output, so nothing is lost crossing shards."""
-    if block_chunks is None:
-        block_chunks = (1 << 14) if interpret else 32
     w = jnp.asarray(weights, jnp.float32)
     partial = quantized_aggregate(
         codes, lo, scale, w, chunk=chunk, levels=levels,

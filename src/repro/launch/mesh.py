@@ -36,6 +36,12 @@ def make_client_mesh(num_devices=None, axis: str = "clients"):
     cohort sharding: a round's m sampled clients run m/D per device, with
     the Pallas aggregation psum-finished across the axis.
 
+    Supersteps (``run(rounds_per_step=R)``) keep this layout: the R-round
+    ``lax.scan`` runs INSIDE the shard_map over this mesh — every shard
+    replays the replicated on-device cohort draw, slices its m/D chunk,
+    and the per-round psum finish is unchanged, so the superstep stays one
+    executable at any D.
+
     ``num_devices=None`` takes every visible device. On CPU, force a
     device count first (before any jax import):
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — the sharded

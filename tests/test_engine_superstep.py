@@ -1,0 +1,256 @@
+"""Device-resident supersteps: the lax.scan-fused multi-round loop.
+
+The contract under test: ``run(n, rounds_per_step=R)`` on a
+``device_sampling=True`` engine must reproduce R individual ``round()``
+calls ROUND FOR ROUND — same on-device cohort draws (the key schedule of
+one scan iteration is identical to the eager ``_next_round_inputs``
+branch), same batch permutations and codec draws, same params — while
+syncing the host once per R rounds from at most 2 compiled executables.
+
+The sharded variants run at whatever device count the backend exposes
+(D=1 still exercises the in-scan cohort slicing); the ``tier1-sharded``
+CI lane re-runs this file under 8 forced host devices so the scan-inside-
+shard_map path actually splits cohorts (including ghost padding).
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FedAvgConfig,
+    RoundEngine,
+    identity_codec,
+    quantize_codec,
+    sample_clients_device,
+)
+from repro.launch.mesh import make_client_mesh
+from repro.models import mnist_2nn
+
+
+def _clients(rng, sizes, d=12, classes=5):
+    return [
+        (rng.normal(size=(n, d)).astype(np.float32),
+         rng.integers(0, classes, n).astype(np.int32))
+        for n in sizes
+    ]
+
+
+def _engine(rng, *, codec=None, mesh=None, eval_fn=None,
+            sizes=(9, 24, 17, 40, 8, 33), cfg=None, device_sampling=True):
+    model = mnist_2nn(n_classes=5, d_in=12)
+    params = model.init(jax.random.PRNGKey(0))
+    cfg = cfg or FedAvgConfig(C=0.75, E=2, B=8, lr=0.2, lr_decay=0.98, seed=7)
+    return RoundEngine(model.loss, params, _clients(rng, list(sizes)), cfg,
+                       eval_fn=eval_fn, codec=codec, mesh=mesh,
+                       device_sampling=device_sampling)
+
+
+def _losses(history):
+    return [r.train_loss for r in history.records]
+
+
+# ---------------------------------------------------------------------------
+# superstep(R) == R x per-round round(), all codec paths
+# ---------------------------------------------------------------------------
+
+def _superstep_vs_per_round(rng, codec, n_rounds, R, atol):
+    a = _engine(np.random.default_rng(0), codec=codec)
+    b = _engine(np.random.default_rng(0), codec=codec)
+    h = a.run(n_rounds, rounds_per_step=R)
+    lb = [float(jax.block_until_ready(b.round()["loss"]))
+          for _ in range(n_rounds)]
+    assert len(h.records) == n_rounds
+    for la, lb_ in zip(_losses(h), lb):
+        assert abs(la - lb_) <= atol, (la, lb_)
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol)
+    return a
+
+
+def test_superstep_matches_per_round_plain(rng):
+    eng = _superstep_vs_per_round(rng, None, n_rounds=6, R=3, atol=1e-5)
+    assert eng.num_compilations <= 2
+
+
+def test_superstep_matches_per_round_identity_codec(rng):
+    _superstep_vs_per_round(rng, identity_codec(), n_rounds=4, R=2, atol=1e-5)
+
+
+def test_superstep_matches_per_round_quantize_codec(rng):
+    """One-code-step tolerance: a 1-ulp divergence in round t can flip one
+    stochastic-rounding draw in round t+1 (same bound as the sharded
+    equivalence tests)."""
+    _superstep_vs_per_round(rng, quantize_codec(8, chunk=256),
+                            n_rounds=4, R=2, atol=1e-3)
+
+
+def test_superstep_sharded_matches_unsharded(rng):
+    """Scan-inside-shard_map: a sharded superstep run must match the
+    unsharded superstep run round for round (the in-scan cohort slicing is
+    the same split shard_map applies to per-round inputs). With 8 forced
+    devices (CI lane) m=6 % D=8 != 0 exercises ghost padding inside the
+    scan."""
+    base = _engine(np.random.default_rng(0))
+    shrd = _engine(np.random.default_rng(0), mesh=make_client_mesh())
+    hb = base.run(4, rounds_per_step=2)
+    hs = shrd.run(4, rounds_per_step=2)
+    for la, lb in zip(_losses(hb), _losses(hs)):
+        assert abs(la - lb) <= 1e-5
+    for x, y in zip(jax.tree.leaves(base.params), jax.tree.leaves(shrd.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+    assert shrd.num_compilations <= 2
+
+
+# ---------------------------------------------------------------------------
+# on-device sampler distribution
+# ---------------------------------------------------------------------------
+
+def test_sample_clients_device_distinct_and_uniform():
+    """Each draw is m distinct ids; over many keyed draws every client is
+    selected equally often (chi-square over the membership counts, df=K-1;
+    99.9th percentile of chi2(9) is ~27.9, so 40 is a generous bound for a
+    correct sampler and far below the skew a biased one produces)."""
+    K, m, draws = 10, 3, 4000
+    base = jax.random.PRNGKey(123)
+    sample = jax.jit(
+        lambda k: jax.vmap(
+            lambda i: sample_clients_device(jax.random.fold_in(k, i), K, m)
+        )(jnp.arange(draws))
+    )
+    ids = np.asarray(sample(base))
+    assert ids.shape == (draws, m)
+    assert ((0 <= ids) & (ids < K)).all()
+    for row in ids[:50]:
+        assert len(set(row.tolist())) == m
+    counts = np.bincount(ids.reshape(-1), minlength=K)
+    expected = draws * m / K
+    chi2 = float(((counts - expected) ** 2 / expected).sum())
+    assert chi2 < 40.0, (chi2, counts.tolist())
+
+
+# ---------------------------------------------------------------------------
+# resume mid-superstep
+# ---------------------------------------------------------------------------
+
+def test_superstep_resume_reproduces_uninterrupted_run(rng, tmp_path):
+    """Interrupt at a superstep boundary, save, restore into a FRESH
+    engine, finish — losses and params must match the uninterrupted run
+    bit for bit (the scan-carry key is persisted alongside round_idx)."""
+    straight = _engine(np.random.default_rng(1))
+    h_straight = straight.run(6, rounds_per_step=3)
+
+    interrupted = _engine(np.random.default_rng(1))
+    interrupted.run(3, rounds_per_step=3)
+    interrupted.save(tmp_path)
+
+    resumed = _engine(np.random.default_rng(1))
+    assert resumed.restore(tmp_path) == 3
+    h_resumed = resumed.run(3, rounds_per_step=3)
+
+    assert _losses(h_resumed) == _losses(h_straight)[3:]
+    for a, b in zip(jax.tree.leaves(resumed.params),
+                    jax.tree.leaves(straight.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_rejects_sampling_mode_mismatch(rng, tmp_path):
+    """A device-sampling checkpoint restored into a legacy-stream engine
+    (or vice versa) would silently continue on a DIFFERENT cohort stream;
+    restore must refuse, and must refuse before mutating engine state."""
+    saver = _engine(np.random.default_rng(2))
+    saver.run(2, rounds_per_step=2)
+    saver.save(tmp_path)
+
+    legacy = _engine(np.random.default_rng(2), device_sampling=False)
+    with pytest.raises(ValueError, match="device_sampling"):
+        legacy.restore(tmp_path)
+    assert legacy.round_idx == 0  # nothing was half-applied
+
+
+# ---------------------------------------------------------------------------
+# compile count / run() semantics
+# ---------------------------------------------------------------------------
+
+def test_superstep_compile_count(rng):
+    """num_compilations <= 2 with supersteps enabled: one scan-of-R
+    executable reused across chunks and run() calls, plus at most one
+    per-round executable if round() is also used."""
+    eng = _engine(rng)
+    eng.run(8, rounds_per_step=4)   # two chunks, one executable
+    assert eng.num_compilations == 1
+    eng.run(4, rounds_per_step=4)   # same executable again
+    assert eng.num_compilations == 1
+    eng.round()                     # per-round path adds its executable
+    assert eng.num_compilations == 2
+
+
+def test_superstep_auto_rounds_per_step(rng):
+    """rounds_per_step=None on a device-sampling engine supersteps at
+    eval_every granularity (host control exactly when evaluation needs
+    it); with no eval_fn the whole run is one chunk."""
+    ev = lambda p: {"acc": 0.5, "loss": 1.0}
+    eng = _engine(rng, eval_fn=ev)
+    h = eng.run(4, eval_every=2)
+    assert [(r.round, r.test_acc is not None) for r in h.records] == [
+        (1, False), (2, True), (3, False), (4, True)
+    ]
+    assert eng.num_compilations == 1  # scan-of-2, no per-round executable
+
+    eng2 = _engine(rng)
+    eng2.run(5)  # no eval_fn: one scan-of-5 chunk
+    assert eng2.num_compilations == 1
+
+
+def test_superstep_eval_fires_when_chunk_crosses_eval_point(rng):
+    """Regression: eval used to fire only when round_idx landed EXACTLY on
+    a multiple of eval_every, so R misaligned to eval_every (or a
+    non-aligned starting round_idx) silently skipped every mid-run eval —
+    and target_acc could overshoot unboundedly instead of by <= R-1."""
+    calls = []
+
+    def ev(p):
+        calls.append(1)
+        return {"acc": 0.5, "loss": 1.0}
+
+    eng = _engine(rng, eval_fn=ev)
+    eng.run(9, eval_every=2, rounds_per_step=3)  # chunks end at 3, 6, 9
+    # every chunk crosses an eval point (3 covers 2, 6 covers 4+6, 9 covers 8)
+    assert len(calls) == 3
+    evaled = [r.round for r in eng.history.records if r.test_acc is not None]
+    assert evaled == [3, 6, 9]
+
+
+def test_superstep_requires_device_sampling(rng):
+    """The numpy-stream engine cannot feed the fused executable's on-device
+    cohort draw; asking for supersteps there must fail loudly instead of
+    silently switching sampling streams."""
+    eng = _engine(rng, device_sampling=False)
+    with pytest.raises(ValueError, match="device_sampling"):
+        eng.run(4, rounds_per_step=2)
+    assert eng.round_idx == 0
+    # R=1 stays the per-round loop and is always allowed
+    eng.run(1, rounds_per_step=1)
+    assert eng.round_idx == 1
+
+
+def test_superstep_wall_clock_amortized(rng):
+    """Each round in a chunk is charged chunk_time / R — equal, positive
+    per-round wall times inside a chunk."""
+    eng = _engine(rng)
+    h = eng.run(4, rounds_per_step=4)
+    walls = [r.wall_s for r in h.records]
+    assert all(w > 0 for w in walls)
+    assert len(set(walls)) == 1  # one chunk -> identical amortized charge
+
+
+def test_superstep_no_donation_warning(rng):
+    """The superstep donates params + the scan-carry key; donation must
+    actually take (no 'donated buffers were not usable' warning)."""
+    eng = _engine(rng)
+    with warnings.catch_warnings():
+        warnings.filterwarnings("error", message=".*[Dd]onat.*")
+        eng.run(4, rounds_per_step=2)
+    assert len(eng.history.records) == 4

@@ -48,11 +48,22 @@ def clients_for(train, fed, flatten=True):
 
 
 def run_setting(model_name, clients, test, cfg, rounds, target, flatten=True):
+    from repro.specs import ExperimentSpec, ModelSpec, PartitionSpec
+
     model = mnist_2nn() if model_name == "2nn" else mnist_cnn()
     params = model.init(jax.random.PRNGKey(0))
     xt = test.x.reshape(len(test.x), -1) if flatten else test.x
     ev = make_eval_fn(model.apply, xt, test.y)
-    tr = RoundEngine(model.loss, params, clients, cfg, eval_fn=ev)
+    # The declarative front door, like examples/scripts (clients arrive
+    # pre-partitioned by the caller, so the partition field is a label).
+    spec = ExperimentSpec(
+        name=f"bench_{model_name}",
+        model=ModelSpec("mnist_2nn" if model_name == "2nn" else "mnist_cnn"),
+        partition=PartitionSpec("iid", n_clients=len(clients)),
+        fedavg=cfg, rounds=rounds, target_acc=target,
+    )
+    tr = RoundEngine.from_spec(spec, clients, loss_fn=model.loss,
+                               init_params=params, eval_fn=ev)
     t0 = time.time()
     h = tr.run(rounds, eval_every=1, target_acc=target)
     wall = time.time() - t0

@@ -30,6 +30,7 @@ from repro.core import FedAvgConfig, RoundEngine, build_round_batch_host
 from repro.core.fedavg import fedavg_round
 from repro.data import make_image_classification, partition_unbalanced
 from repro.models import mnist_2nn, mnist_cnn
+from repro.specs import ExperimentSpec, ModelSpec, PartitionSpec
 
 
 def _population(quick: bool):
@@ -64,8 +65,18 @@ def _bench_legacy(model, params, clients, cfg, rounds):
     return t_total / rounds, len(compiles)
 
 
-def _bench_engine(model, params, clients, cfg, rounds):
-    eng = RoundEngine(model.loss, params, clients, cfg)
+def _bench_engine(model, params, clients, cfg, rounds, model_kind):
+    # Engines construct through the declarative front door, like the
+    # examples/scripts do — the benchmark measures what users run.
+    spec = ExperimentSpec(
+        name=f"bench_{model_kind}",
+        model=ModelSpec(model_kind),
+        partition=PartitionSpec("unbalanced", n_clients=len(clients)),
+        fedavg=cfg,
+    )
+    eng = RoundEngine.from_spec(
+        spec, clients, loss_fn=model.loss, init_params=params
+    )
     eng.round()  # warm up the single executable outside the timed loop
     t0 = time.perf_counter()
     for _ in range(rounds):
@@ -186,6 +197,80 @@ def superstep(quick: bool = True) -> None:
         )
 
 
+def strategy_overhead(quick: bool = True) -> None:
+    """The cost of the ServerStrategy seam: FedAvg routed through the
+    strategy protocol (aggregate fp32 deltas -> ``FedAvg.apply``) vs the
+    pre-refactor inline round step (aggregate client params directly,
+    kept as the ``strategy=None`` baseline in
+    ``engine.build_simulation_round_step``). Both are jitted on IDENTICAL
+    materialized batches, so the difference is exactly the delta round
+    trip the seam adds; FedAvgM rides along to price a stateful strategy.
+
+    Gate: FedAvg-via-strategy must stay within 5% wall overhead of the
+    pre-refactor step (the PR's acceptance bar; the suite raises on a
+    miss). Timings take the min over several trials to shed CI-box noise.
+
+        PYTHONPATH=src python -m benchmarks.run --only round_engine_strategy
+    """
+    from repro.core.engine import (
+        RoundBatch,
+        RoundState,
+        build_simulation_round_step,
+    )
+    from repro.core.strategies import FedAvg, FedAvgM
+
+    clients = [(x.reshape(len(x), -1), y) for x, y in _population(quick)]
+    model = mnist_2nn()
+    params = model.init(jax.random.PRNGKey(0))
+    # E=5 keeps the round compute-dominated (the regime that matters);
+    # the seam's extra tree ops are O(N) regardless of E.
+    cfg = FedAvgConfig(C=0.6, E=5, B=10, lr=0.1, seed=0)
+    eng = RoundEngine(model.loss, params, clients, cfg)
+    ids, valid, key, lr = eng._next_round_inputs()
+    batch, mask, w = eng.materialize_round_batch(ids, key)
+    rb = RoundBatch(batch, mask, w, lr=lr)
+    rounds = 3 if quick else 10
+    trials = 5 if quick else 7
+
+    def bench(step, state):
+        jitted = jax.jit(step)
+        jax.block_until_ready(jitted(state, rb)[1]["loss"])  # warm
+        best = float("inf")
+        for _ in range(trials):
+            t0 = time.perf_counter()
+            for _ in range(rounds):
+                out_state, m = jitted(state, rb)
+                jax.block_until_ready(m["loss"])
+            best = min(best, (time.perf_counter() - t0) / rounds)
+        return best
+
+    t_pre = bench(build_simulation_round_step(model.loss),
+                  RoundState(params))
+    t_avg = bench(
+        build_simulation_round_step(model.loss, strategy=FedAvg()),
+        RoundState(params),
+    )
+    mstrat = FedAvgM(momentum=0.9)
+    t_m = bench(
+        build_simulation_round_step(model.loss, strategy=mstrat),
+        RoundState(params, outer_state=mstrat.init_state(params)),
+    )
+    overhead = t_avg / max(t_pre, 1e-12) - 1.0
+    emit("round_engine/strategy/pre_refactor_inline", t_pre * 1e6, "baseline")
+    emit("round_engine/strategy/fedavg_via_strategy", t_avg * 1e6,
+         f"overhead_vs_inline={overhead * 100:+.1f}%")
+    emit("round_engine/strategy/fedavgm", t_m * 1e6,
+         f"overhead_vs_inline={(t_m / max(t_pre, 1e-12) - 1) * 100:+.1f}%")
+    ok = overhead <= 0.05
+    emit("round_engine/strategy_overhead", overhead * 100,
+         f"required<=5.0%;{'pass' if ok else 'FAIL'}")
+    if not ok:
+        raise AssertionError(
+            f"strategy seam gate: FedAvg-via-strategy must stay within 5% "
+            f"of the pre-refactor round step, got {overhead * 100:+.1f}%"
+        )
+
+
 def main(quick: bool = True) -> None:
     clients = _population(quick)
     rounds = 5 if quick else 20
@@ -204,7 +289,8 @@ def main(quick: bool = True) -> None:
         params = model.init(jax.random.PRNGKey(0))
         cfg = FedAvgConfig(C=0.6, E=1 if name == "cnn" else 5, B=B, lr=0.1, seed=0)
         t_old, shapes_old = _bench_legacy(model, params, cls, cfg, rounds)
-        t_new, compiles_new = _bench_engine(model, params, cls, cfg, rounds)
+        t_new, compiles_new = _bench_engine(model, params, cls, cfg, rounds,
+                                            "mnist_" + name)
         emit(f"round_engine/{name}/legacy_host_assembly", t_old * 1e6,
              f"distinct_shapes={shapes_old}")
         emit(f"round_engine/{name}/engine_device_gather", t_new * 1e6,

@@ -44,6 +44,7 @@ SUITES = {
     "round_engine": round_engine.main,
     "round_engine_scaling": round_engine.scaling,
     "round_engine_superstep": round_engine.superstep,
+    "round_engine_strategy": round_engine.strategy_overhead,
     "compression": compression.main,
 }
 

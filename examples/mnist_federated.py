@@ -4,23 +4,54 @@
         --model 2nn --partition noniid --C 0.1 --E 5 --B 10 \
         --rounds 50 --target 0.90
 
-Compares against FedSGD with --E 1 --B inf. Uses the synthetic MNIST
-stand-in (offline container; see DESIGN.md).
+Compares against FedSGD with --strategy fedsgd (which pins E=1, B=inf).
+The CLI assembles a declarative ``ExperimentSpec`` — print it with
+--print-spec, replay it elsewhere with ``ExperimentSpec.from_json`` —
+and constructs the engine via ``RoundEngine.from_spec``. Uses the
+synthetic MNIST stand-in (offline container; see DESIGN.md).
 """
 from __future__ import annotations
 
 import argparse
 
-import jax
+from repro.core import FedAvgConfig, FedAvgM, make_eval_fn, RoundEngine
+from repro.core.strategies import FedAvg, FedSGD
+from repro.data import make_image_classification
+from repro.specs import CodecSpec, ExperimentSpec, ModelSpec, PartitionSpec
 
-from repro.core import FedAvgConfig, RoundEngine, make_eval_fn
-from repro.data import (
-    make_image_classification,
-    partition_iid,
-    partition_pathological_noniid,
-    partition_unbalanced,
-)
-from repro.models import mnist_2nn, mnist_cnn
+
+def build_spec(args) -> ExperimentSpec:
+    B = None if args.B == "inf" else int(args.B)
+    strategy = {
+        "fedavg": FedAvg(),
+        "fedsgd": FedSGD(),
+        "fedavgm": FedAvgM(momentum=args.momentum),
+    }[args.strategy]
+    if args.strategy == "fedsgd":
+        B, E = None, 1  # the preset's contract; FedSGD() enforces it
+    else:
+        E = args.E
+    codec = {
+        "none": None,
+        "q8": CodecSpec("quantize", bits=8),
+        "q4": CodecSpec("quantize", bits=4),
+        "mask": CodecSpec("mask", keep_frac=0.1),
+        "topk": CodecSpec("topk", keep_frac=0.05),
+    }[args.codec]
+    return ExperimentSpec(
+        name=f"mnist_{args.model}_{args.partition}_cli",
+        model=ModelSpec("mnist_2nn" if args.model == "2nn" else "mnist_cnn"),
+        partition=PartitionSpec(
+            {"iid": "iid", "noniid": "pathological_noniid",
+             "unbalanced": "unbalanced"}[args.partition],
+            n_clients=args.clients, seed=args.seed,
+        ),
+        fedavg=FedAvgConfig(C=args.C, E=E, B=B, lr=args.lr, seed=args.seed),
+        strategy=strategy,
+        codec=codec,
+        rounds=args.rounds,
+        target_acc=args.target,
+    )
 
 
 def main():
@@ -42,59 +73,59 @@ def main():
         help="client-upload compression (docs/compression.md); traces into "
              "the same single round executable",
     )
+    ap.add_argument(
+        "--strategy", choices=["fedavg", "fedsgd", "fedavgm"],
+        default="fedavg",
+        help="server update rule (docs/strategies.md); fedsgd pins E=1 B=inf",
+    )
+    ap.add_argument("--momentum", type=float, default=0.9,
+                    help="server momentum for --strategy fedavgm")
+    ap.add_argument("--print-spec", action="store_true",
+                    help="dump the assembled ExperimentSpec JSON and exit")
     args = ap.parse_args()
+
+    spec = build_spec(args)
+    if args.print_spec:
+        print(spec.to_json(indent=2))
+        return
 
     train, test, _ = make_image_classification(
         args.n_train, args.n_train // 5, seed=5, difficulty=1.5
     )
-    if args.partition == "iid":
-        fed = partition_iid(len(train.x), args.clients, seed=args.seed)
-    elif args.partition == "noniid":
-        fed = partition_pathological_noniid(train.y, args.clients, 2, seed=args.seed)
-    else:
-        fed = partition_unbalanced(len(train.x), args.clients, seed=args.seed)
+    fed = spec.build_partition(labels=train.y)
 
     flatten = args.model == "2nn"
     clients = [
         (train.x[ix].reshape(len(ix), -1) if flatten else train.x[ix], train.y[ix])
         for ix in fed.client_indices
     ]
-    model = mnist_2nn() if args.model == "2nn" else mnist_cnn()
-    params = model.init(jax.random.PRNGKey(args.seed))
-    B = None if args.B == "inf" else int(args.B)
-    cfg = FedAvgConfig(C=args.C, E=args.E, B=B, lr=args.lr, seed=args.seed)
+    # Build the model ONCE: the eval fn and the engine share it (from_spec
+    # would otherwise construct its own copy for loss_fn/init_params).
+    model = spec.build_model()
+    import jax
+
+    params = model.init(jax.random.PRNGKey(spec.fedavg.seed))
+    cfg = spec.fedavg
     xt = test.x.reshape(len(test.x), -1) if flatten else test.x
     ev = make_eval_fn(model.apply, xt, test.y)
-    from repro.core import (
-        identity_codec,
-        mask_codec,
-        quantize_codec,
-        topk_codec,
-        wire_bytes,
-    )
+    from repro.core import identity_codec, wire_bytes
 
-    codec = {
-        "none": None,
-        "q8": quantize_codec(8),
-        "q4": quantize_codec(4),
-        "mask": mask_codec(0.1),
-        "topk": topk_codec(0.05),
-    }[args.codec]
-    tr = RoundEngine(model.loss, params, clients, cfg, eval_fn=ev, codec=codec)
+    tr = RoundEngine.from_spec(spec, clients, eval_fn=ev,
+                               loss_fn=model.loss, init_params=params)
+    codec = tr.codec
     hist = tr.run(args.rounds, eval_every=1, target_acc=args.target, verbose=True)
     r = hist.rounds_to_target(args.target)
     u = cfg.expected_updates_per_round(len(train.x), args.clients)
     print(f"\nu={u:.0f} updates/client/round; rounds to {args.target:.0%}: {r}")
     if codec is not None:
-        kb = wire_bytes(codec, params) / 1024
-        dense_kb = wire_bytes(identity_codec(), params) / 1024
+        kb = wire_bytes(codec, tr.params) / 1024
+        dense_kb = wire_bytes(identity_codec(), tr.params) / 1024
         print(f"codec={codec.name}: {kb:.1f} KB uploaded/client/round "
               f"(dense fp32: {dense_kb:.1f} KB)")
     if args.checkpoint_dir:
-        from repro.checkpoint import save_checkpoint
-
-        save_checkpoint(args.checkpoint_dir, tr.params, step=tr.round_idx,
-                        metadata={"acc_target": args.target, "rounds": tr.round_idx})
+        # engine.save also records the strategy state + identity and both
+        # sampling streams, so the checkpoint resumes bit for bit.
+        tr.save(args.checkpoint_dir)
         print("checkpoint saved to", args.checkpoint_dir)
 
 

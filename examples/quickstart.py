@@ -1,29 +1,46 @@
-"""Quickstart: FederatedAveraging in ~30 lines.
+"""Quickstart: FederatedAveraging from a declarative paper preset.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Experiments are values: pick a preset from the ``specs/`` registry, adapt
+it with ``dataclasses.replace``, and hand it to ``RoundEngine.from_spec``.
+The spec JSON-round-trips (``spec.to_json()``), so the exact run is
+shareable as a file — see specs/README.md for the full grid.
 """
+import dataclasses
+
 import jax
 
-from repro.core import FedAvgConfig, RoundEngine, make_eval_fn
-from repro.data import make_image_classification, partition_pathological_noniid
-from repro.models import mnist_2nn
+from repro.core import RoundEngine, make_eval_fn
+from repro.data import make_image_classification
+from repro.specs import PartitionSpec, get_spec
 
-# 1. A federated dataset: 50 clients, each holding ~2 classes (the paper's
-#    pathological non-IID partition).
+# 1. The paper's non-IID MNIST 2NN cell, scaled to quickstart size: 50
+#    clients of ~2 classes each (pathological partition), C=20%/round.
+spec = dataclasses.replace(
+    get_spec("mnist_2nn_noniid"),
+    partition=PartitionSpec("pathological_noniid", n_clients=50,
+                            shards_per_client=2),
+    fedavg=dataclasses.replace(get_spec("mnist_2nn_noniid").fedavg,
+                               C=0.2, lr=0.05),
+)
+
+# 2. A federated dataset: the synthetic MNIST stand-in, split by the
+#    spec's own partition description.
 train, test, _ = make_image_classification(5000, 1000, seed=0, difficulty=1.5)
-fed = partition_pathological_noniid(train.y, n_clients=50, shards_per_client=2)
-clients = [(train.x[ix].reshape(len(ix), -1), train.y[ix]) for ix in fed.client_indices]
+fed = spec.build_partition(labels=train.y)
+clients = [(train.x[ix].reshape(len(ix), -1), train.y[ix])
+           for ix in fed.client_indices]
 
-# 2. A model (the paper's MNIST 2NN: 199,210 params) and Algorithm 1 config:
-#    C=20% of clients per round, E=5 local epochs, minibatch B=10.
-model = mnist_2nn()
-params = model.init(jax.random.PRNGKey(0))
-cfg = FedAvgConfig(C=0.2, E=5, B=10, lr=0.05)
-
-# 3. Run rounds until 80% test accuracy. RoundEngine packs all 50 clients
-#    onto the device once and reuses ONE compiled round executable.
+# 3. Run rounds until 80% test accuracy. The spec names the model
+#    (199,210-param 2NN); build it once — eval fn and engine share it —
+#    and from_spec packs all 50 clients onto the device once, so every
+#    round reuses ONE compiled executable.
+model = spec.build_model()
+params = model.init(jax.random.PRNGKey(spec.fedavg.seed))
 ev = make_eval_fn(model.apply, test.x.reshape(len(test.x), -1), test.y)
-engine = RoundEngine(model.loss, params, clients, cfg, eval_fn=ev)
+engine = RoundEngine.from_spec(spec, clients, eval_fn=ev,
+                               loss_fn=model.loss, init_params=params)
 history = engine.run(30, eval_every=1, target_acc=0.80, verbose=True)
 print("rounds to 80%:", history.rounds_to_target(0.80))
 print("round executables compiled:", engine.num_compilations)

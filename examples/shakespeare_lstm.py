@@ -2,19 +2,26 @@
 paper's unbalanced, naturally non-IID setting (1146 speaking roles; here a
 synthetic Markov corpus with the same structure, scaled by --roles).
 
+Starts from the ``shakespeare_lstm`` paper preset in the ``specs/``
+registry and adapts it with ``dataclasses.replace`` — the data is already
+federated (one client per role: partition kind "natural"), so only the
+model/optimizer knobs vary.
+
     PYTHONPATH=src python examples/shakespeare_lstm.py --roles 60 --rounds 20
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import numpy as np
 
-from repro.core import FedAvgConfig, FederatedTrainer, fedsgd_config, make_eval_fn
+from repro.core import FedAvgConfig, FederatedTrainer, make_eval_fn
+from repro.core.strategies import FedSGD
 from repro.data.batching import windows_from_sequence
 from repro.data.synthetic import make_char_corpus
-from repro.models import char_lstm
+from repro.specs import ModelSpec, PartitionSpec, get_spec
 
 
 def main():
@@ -38,15 +45,25 @@ def main():
     tx, ty = zip(*(windows_from_sequence(t, args.unroll) for t in test))
     x_test, y_test = np.concatenate(tx)[:2000], np.concatenate(ty)[:2000]
 
-    model = char_lstm(V, hidden=args.hidden)
-    params = model.init(jax.random.PRNGKey(0))
-    cfg = (
-        fedsgd_config(C=args.C, lr=20.0)
-        if args.fedsgd
-        else FedAvgConfig(C=args.C, E=args.E, B=args.B, lr=args.lr)
+    base = get_spec("shakespeare_lstm")
+    spec = dataclasses.replace(
+        base,
+        model=ModelSpec("char_lstm",
+                        kwargs={"vocab_size": V, "hidden": args.hidden}),
+        partition=PartitionSpec("natural", n_clients=len(clients)),
+        fedavg=(
+            FedAvgConfig(C=args.C, E=1, B=None, lr=20.0)
+            if args.fedsgd
+            else FedAvgConfig(C=args.C, E=args.E, B=args.B, lr=args.lr)
+        ),
+        strategy=FedSGD() if args.fedsgd else base.strategy,
+        rounds=args.rounds,
     )
+    model = spec.build_model()  # once: eval fn and trainer share it
+    params = model.init(jax.random.PRNGKey(spec.fedavg.seed))
     ev = make_eval_fn(model.apply, x_test, y_test, batch_size=256)
-    tr = FederatedTrainer(model.loss, params, clients, cfg, eval_fn=ev)
+    tr = FederatedTrainer.from_spec(spec, clients, eval_fn=ev,
+                                    loss_fn=model.loss, init_params=params)
     tr.run(args.rounds, eval_every=1, verbose=True)
 
 

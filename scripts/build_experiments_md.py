@@ -1,18 +1,110 @@
 #!/usr/bin/env python
-"""Regenerate the data-driven sections of EXPERIMENTS.md from results/.
+"""Regenerate the data-driven experiment artifacts.
 
-Writes results/experiments_generated.md with §Dry-run and §Roofline tables;
-EXPERIMENTS.md includes the narrative + pasted tables (run this after sweeps
-and copy/refresh).
+Two jobs:
+
+1. **The paper grid, from code** (always runs): render the ``specs/``
+   registry (``repro.specs.presets.PAPER_SPECS``) as a markdown table —
+   name, model, partition, C/E/B, lr, server strategy, codec, execution
+   lane — into ``specs/README.md``, and export every preset's JSON wire
+   form to ``specs/<name>.json``. The JSON files are what
+   ``ExperimentSpec.from_json`` consumes and what tests/test_spec.py pins
+   against the Python registry, so rerun this after editing presets.
+
+2. **Dry-run / roofline / hillclimb tables** (only when ``results/``
+   exists): writes ``results/experiments_generated.md`` as before.
+
+    PYTHONPATH=src python scripts/build_experiments_md.py
 """
 import json
 import sys
 from pathlib import Path
 
-sys.path.insert(0, "src")
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.launch.roofline import load_results, render_table  # noqa: E402
+from repro.core.strategies import strategy_to_json  # noqa: E402
+from repro.specs import PAPER_SPECS  # noqa: E402
 
+
+# ---------------------------------------------------------------------------
+# specs/ registry -> table + json export
+# ---------------------------------------------------------------------------
+
+def _fmt_strategy(spec):
+    d = strategy_to_json(spec.strategy)
+    kind = d.pop("kind")
+    args = ",".join(f"{k}={v:g}" for k, v in sorted(d.items()))
+    return f"{kind}({args})" if args else kind
+
+
+def _fmt_codec(spec):
+    if spec.codec is None:
+        return "dense fp32"
+    c = spec.codec
+    if c.kind == "quantize":
+        return f"q{c.bits} (chunk {c.chunk})"
+    if c.kind in ("mask", "topk"):
+        return f"{c.kind} p={c.keep_frac:g}"
+    return c.kind
+
+
+def _fmt_execution(spec):
+    ex = spec.execution
+    parts = []
+    if ex.mesh_axes:
+        parts.append(f"sharded[{ex.mesh_axes}]")
+    if ex.device_sampling:
+        r = ex.rounds_per_step
+        parts.append(f"superstep R={r}" if r else "device sampling")
+    return " + ".join(parts) if parts else "per-round"
+
+
+def specs_table() -> str:
+    lines = [
+        "| name | model | partition | C | E | B | lr | strategy | codec | execution |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for name in sorted(PAPER_SPECS):
+        s = PAPER_SPECS[name]
+        cfg = s.fedavg
+        B = "inf" if cfg.B is None else cfg.B
+        part = s.partition.kind
+        if s.partition.kind == "pathological_noniid":
+            part = f"noniid({s.partition.shards_per_client} shards)"
+        lines.append(
+            f"| {name} | {s.model.kind} | {part} x{s.partition.n_clients} | "
+            f"{cfg.C:g} | {cfg.E} | {B} | {cfg.lr:g} | {_fmt_strategy(s)} | "
+            f"{_fmt_codec(s)} | {_fmt_execution(s)} |"
+        )
+    return "\n".join(lines)
+
+
+def export_specs(spec_dir: Path) -> int:
+    """Write specs/<name>.json + specs/README.md; prune stale json files so
+    the directory IS the registry (tests assert exact set equality)."""
+    spec_dir.mkdir(parents=True, exist_ok=True)
+    for stale in spec_dir.glob("*.json"):
+        if stale.stem not in PAPER_SPECS:
+            stale.unlink()
+    for name, spec in PAPER_SPECS.items():
+        (spec_dir / f"{name}.json").write_text(spec.to_json(indent=2) + "\n")
+    (spec_dir / "README.md").write_text(
+        "# The experiment grid (generated — do not edit)\n\n"
+        "One `ExperimentSpec` per cell of the paper's empirical program,\n"
+        "exported from `repro.specs.presets.PAPER_SPECS` by\n"
+        "`scripts/build_experiments_md.py`. Load one with\n"
+        "`ExperimentSpec.from_json(path.read_text())` or by name with\n"
+        "`repro.specs.get_spec(name)`, then construct the engine via\n"
+        "`RoundEngine.from_spec(spec, client_data, eval_fn=...)`\n"
+        "(docs/engine.md \"Constructing engines\").\n\n"
+        + specs_table() + "\n"
+    )
+    return len(PAPER_SPECS)
+
+
+# ---------------------------------------------------------------------------
+# results/ tables (dry-run sweeps; unchanged from the launch tooling)
+# ---------------------------------------------------------------------------
 
 def fmt_bytes(b):
     return f"{b/2**30:.2f}"
@@ -38,9 +130,9 @@ def dryrun_section(rows):
     return "\n".join(lines)
 
 
-def hillclimb_section():
+def hillclimb_section(root: Path):
     rows = []
-    for p in sorted(Path("results/hillclimb").glob("*.json")):
+    for p in sorted((root / "results" / "hillclimb").glob("*.json")):
         r = json.loads(p.read_text())
         if "roofline" in r:  # skip auxiliary artifacts (pod_axis_attribution)
             rows.append(r)
@@ -60,20 +152,36 @@ def hillclimb_section():
     return "\n".join(lines)
 
 
-def main():
-    rows = load_results("results/dryrun")
-    out = Path("results/experiments_generated.md")
+def results_tables(root: Path):
+    from repro.launch.roofline import load_results, render_table
+
+    rows = load_results(str(root / "results" / "dryrun"))
+    out = root / "results" / "experiments_generated.md"
     parts = [
         "## Generated tables (scripts/build_experiments_md.py)\n",
-        "### Dry-run (all meshes)\n",
+        "### The experiment grid (specs/ registry)\n",
+        specs_table(),
+        "\n### Dry-run (all meshes)\n",
         dryrun_section(rows),
         "\n### Roofline — single-pod baselines\n",
         render_table(rows, mesh="single"),
         "\n### Hillclimb steps\n",
-        hillclimb_section(),
+        hillclimb_section(root),
     ]
     out.write_text("\n".join(parts) + "\n")
     print(f"wrote {out} ({len(rows)} dry-run rows)")
+
+
+def main():
+    # Everything anchors to the repo root (this file's parent), not the
+    # cwd, so the script behaves identically from any invocation directory.
+    root = Path(__file__).resolve().parent.parent
+    n = export_specs(root / "specs")
+    print(f"wrote specs/README.md + {n} spec json files")
+    if (root / "results" / "dryrun").exists():
+        results_tables(root)
+    else:
+        print("no results/dryrun — skipped dry-run/roofline tables")
 
 
 if __name__ == "__main__":

@@ -1,1 +1,6 @@
-from repro.checkpoint.io import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint.io import (
+    save_checkpoint,
+    restore_checkpoint,
+    latest_step,
+    peek_metadata,
+)

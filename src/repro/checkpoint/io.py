@@ -89,6 +89,22 @@ def restore_checkpoint(ckpt_dir, tree_like, *, step: Optional[int] = None):
     return jax.tree_util.tree_unflatten(treedef, leaves), index["metadata"]
 
 
+def peek_metadata(ckpt_dir, *, step: Optional[int] = None) -> dict:
+    """Read ONLY a checkpoint's metadata dict (no array restore) — for
+    compatibility guards that must run, and be able to refuse, before any
+    state is mutated (``RoundEngine.restore``'s sampling-mode and
+    server-strategy checks)."""
+    base = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    index = msgpack.unpackb(
+        (base / f"step_{step:08d}" / "index.msgpack").read_bytes()
+    )
+    return index["metadata"]
+
+
 def latest_step(ckpt_dir) -> Optional[int]:
     base = Path(ckpt_dir)
     if not base.exists():

@@ -15,6 +15,16 @@ from repro.core.engine import (
     RoundStep,
     build_simulation_round_step,
 )
+from repro.core.strategies import (
+    FedAvg,
+    FedAvgM,
+    FedSGD,
+    STRATEGIES,
+    ServerStrategy,
+    resolve_strategy,
+    strategy_from_json,
+    strategy_to_json,
+)
 from repro.core.compression import (
     Codec,
     build_compressed_round_step,

@@ -309,7 +309,8 @@ def decode_aggregate(codec: Codec, payloads, weights, n: int, *,
 
 def build_compressed_round_step(loss_fn, codec: Codec, *,
                                 interpret: Optional[bool] = None,
-                                accum_dtype=jnp.float32, axis_name=None):
+                                accum_dtype=jnp.float32, axis_name=None,
+                                strategy=None):
     """Compressed FedAvg as a unified ``round_step`` (``core.engine``
     protocol), tracing to ONE executable: vmapped ClientUpdate, vmapped
     ``codec.encode`` over the raveled deltas, fused decode+aggregate, apply.
@@ -331,9 +332,16 @@ def build_compressed_round_step(loss_fn, codec: Codec, *,
     with a fresh ``batch.key`` split from the scan carry, so nothing here
     is loop-aware — the codec stream stays per-round keyed (and
     superstep(R) == R per-round calls, see tests/test_engine_superstep.py).
+
+    ``strategy`` (``core.strategies.ServerStrategy``) consumes the decoded
+    weighted-mean delta; the default ``FedAvg()`` IS the historical
+    ``params + avg_delta`` apply, bit for bit, so pre-strategy callers see
+    no change. Stateful strategies thread ``RoundState.outer_state``.
     """
     from repro.core.fedavg import client_update, masked_weighted_loss
+    from repro.core.strategies import resolve_strategy
 
+    strategy = resolve_strategy(strategy)
     interpret = default_interpret() if interpret is None else interpret
 
     def round_step(state, rb):
@@ -357,12 +365,14 @@ def build_compressed_round_step(loss_fn, codec: Codec, *,
             interpret=interpret, accum_dtype=accum_dtype, axis_name=axis_name,
         )
         avg_delta = tree_unravel(spec, avg_flat)
-        new_params = jax.tree.map(
-            lambda p, d: (p + d).astype(p.dtype), params, avg_delta
+        outer, new_params = strategy.apply(
+            state.outer_state, params, avg_delta
         )
         loss = masked_weighted_loss(losses, rb.step_mask, rb.client_weights,
                                     axis_name=axis_name)
-        return state._replace(params=new_params), {"loss": loss}
+        return state._replace(params=new_params, outer_state=outer), {
+            "loss": loss
+        }
 
     return round_step
 

@@ -92,6 +92,11 @@ from repro.core.fedavg import (
     sample_clients_device,
     server_aggregate,
 )
+from repro.core.strategies import (
+    ServerStrategy,
+    resolve_strategy,
+    strategy_to_json,
+)
 from repro.data.batching import pack_clients, pad_cohort, pad_cohort_device
 from repro.kernels.ops import default_interpret
 
@@ -145,6 +150,7 @@ def build_simulation_round_step(
     interpret: Optional[bool] = None,
     accum_dtype=jnp.float32,
     axis_name: Optional[str] = None,
+    strategy: Optional[ServerStrategy] = None,
 ) -> RoundStep:
     """RoundStep over explicit (m, n_steps, B, ...) batches: vmapped
     ClientUpdate then the Pallas-backed server aggregation. This is the
@@ -155,7 +161,17 @@ def build_simulation_round_step(
     named client axis, each shard sees only its (m/D, ...) cohort slice;
     aggregation and the loss reduction then finish with a ``psum`` over
     that axis (``server_aggregate``'s partial-sum mode), so every shard
-    returns the identical new global params."""
+    returns the identical new global params.
+
+    ``strategy``: a ``core.strategies.ServerStrategy``. When given, the
+    round aggregates the fp32 client DELTAS (w_k - w_t) through the same
+    Pallas kernel and hands the weighted-mean delta to ``strategy.apply``
+    (state in ``RoundState.outer_state``) — applied after any psum, so the
+    sharded and unsharded rounds step identically. ``None`` keeps the
+    pre-strategy inline form (aggregate the client params directly; the
+    identity update with no delta round-trip) — bit-for-bit the historical
+    behavior, and the baseline for the ``round_engine_strategy`` overhead
+    benchmark."""
     interpret = default_interpret() if interpret is None else interpret
 
     def round_step(state: RoundState, rb: RoundBatch):
@@ -163,16 +179,34 @@ def build_simulation_round_step(
             lambda b, msk: client_update(loss_fn, state.params, b, msk, rb.lr)
         )
         client_params, losses = upd(rb.data, rb.step_mask)
-        new_params = server_aggregate(
-            client_params,
+        loss = masked_weighted_loss(losses, rb.step_mask, rb.client_weights,
+                                    axis_name=axis_name)
+        if strategy is None:
+            new_params = server_aggregate(
+                client_params,
+                rb.client_weights,
+                interpret=interpret,
+                accum_dtype=accum_dtype,
+                axis_name=axis_name,
+            )
+            return state._replace(params=new_params), {"loss": loss}
+        deltas = jax.tree.map(
+            lambda c, p: (c - p).astype(jnp.float32),
+            client_params, state.params,
+        )
+        agg_delta = server_aggregate(
+            deltas,
             rb.client_weights,
             interpret=interpret,
             accum_dtype=accum_dtype,
             axis_name=axis_name,
         )
-        loss = masked_weighted_loss(losses, rb.step_mask, rb.client_weights,
-                                    axis_name=axis_name)
-        return state._replace(params=new_params), {"loss": loss}
+        outer, new_params = strategy.apply(
+            state.outer_state, state.params, agg_delta
+        )
+        return state._replace(params=new_params, outer_state=outer), {
+            "loss": loss
+        }
 
     return round_step
 
@@ -245,6 +279,16 @@ class RoundEngine:
     static-shape/compile-count guarantees are identical to the plain path —
     asserted by tests/test_compression.py's compile-count test.
 
+    ``strategy=`` swaps the server update rule (``core.strategies``):
+    the round aggregates the fp32 client deltas and the strategy consumes
+    the weighted-mean delta inside the same executable — FedAvg (identity,
+    the default), FedSGD (the named preset; vetoes non-E=1/B=None configs),
+    FedAvgM (server momentum; its velocity tree rides in
+    ``RoundState.outer_state``, the superstep scan carry, and
+    ``save``/``restore``). Prefer constructing through
+    :meth:`from_spec` — the declarative ``ExperimentSpec`` front door —
+    over stacking constructor kwargs.
+
     Cost model: device memory is K x (pool of the LARGEST client) and each
     round scans the largest client's step count (smaller clients mask the
     tail). That trade buys zero recompiles and zero host assembly; for
@@ -277,11 +321,13 @@ class RoundEngine:
         eval_fn: Optional[Callable] = None,
         *,
         codec=None,
+        strategy=None,
         interpret: Optional[bool] = None,
         accum_dtype=jnp.float32,
         mesh=None,
         client_axis: str = "clients",
         device_sampling: bool = False,
+        rounds_per_step: Optional[int] = None,
     ):
         self.loss_fn = loss_fn
         # Private copy: the round executables donate the params buffer
@@ -291,6 +337,15 @@ class RoundEngine:
         self.cfg = cfg
         self.eval_fn = eval_fn
         self.rng = np.random.default_rng(cfg.seed)
+        # The server update rule, pluggable (core.strategies). None/str
+        # resolve to registry instances; FedSGD-style presets get to veto
+        # an inconsistent client config before anything compiles.
+        self.strategy = resolve_strategy(strategy)
+        self.strategy.validate_cfg(cfg)
+        self.outer_state = self.strategy.init_state(self.params)
+        # from_spec threads execution.rounds_per_step here; run() uses it
+        # whenever its own rounds_per_step argument is None.
+        self.default_rounds_per_step = rounds_per_step
         # Cohort/stream state for the two sampling modes. The numpy rng is
         # the legacy per-round stream; sample_key seeds the on-device
         # stream (device_sampling=True and all superstep runs) — a NEW
@@ -327,6 +382,7 @@ class RoundEngine:
 
             rep = NamedSharding(mesh, P())
             self.params = jax.device_put(self.params, rep)
+            self.outer_state = jax.device_put(self.outer_state, rep)
             self.sample_key = jax.device_put(self.sample_key, rep)
             self._x = jax.device_put(self._x, rep)
             if self._y is not None:
@@ -345,6 +401,7 @@ class RoundEngine:
             B=packed.batch_size,
             has_labels=self._y is not None,
             codec=codec,
+            strategy=self.strategy,
             interpret=self.interpret,
             accum_dtype=jnp.dtype(accum_dtype),
             axis_name=client_axis if mesh is not None else None,
@@ -361,36 +418,99 @@ class RoundEngine:
             # Everything replicates except the cohort: ids/valid split
             # m/D-per-device along the client axis; the psum-finished
             # aggregation makes the outputs replicated by construction
-            # (check_rep can't see through pallas_call, so it's off).
+            # (check_rep can't see through pallas_call, so it's off). The
+            # strategy state replicates like the params: strategy.apply
+            # consumes the post-psum (already replicated) delta, so every
+            # shard steps the identical outer state.
             body = shard_map(
                 body,
                 mesh=mesh,
-                in_specs=(P(), P(), P(), P(), P(),
+                in_specs=(P(), P(), P(), P(), P(), P(),
                           P(client_axis), P(client_axis), P(), P()),
-                out_specs=(P(), P()),
-                check_rep=False,
-            )
-            # Supersteps scan INSIDE the shard_map: every input (pools,
-            # params, key, lr schedule) is replicated, each shard slices
-            # its own m/D cohort chunk per round from the replicated
-            # on-device draw, and the per-round psum keeps the aggregation
-            # exactly as in the per-round path.
-            sbody = shard_map(
-                sbody,
-                mesh=mesh,
-                in_specs=(P(),) * 7,
                 out_specs=(P(), P(), P()),
                 check_rep=False,
             )
-        # Buffer donation: params are dead the moment a round returns the
-        # new global params (same shapes/dtypes), so the server update is
-        # in-place instead of allocating a fresh param tree every round.
-        # The superstep additionally donates the scan carry's PRNG key.
-        # The undonated bodies stay reachable for tests/benchmarks.
+            # Supersteps scan INSIDE the shard_map: every input (pools,
+            # params, strategy state, key, lr schedule) is replicated, each
+            # shard slices its own m/D cohort chunk per round from the
+            # replicated on-device draw, and the per-round psum keeps the
+            # aggregation exactly as in the per-round path.
+            sbody = shard_map(
+                sbody,
+                mesh=mesh,
+                in_specs=(P(),) * 8,
+                out_specs=(P(), P(), P(), P()),
+                check_rep=False,
+            )
+        # Buffer donation: params and the strategy state are dead the
+        # moment a round returns their successors (same shapes/dtypes), so
+        # the server update is in-place instead of allocating fresh trees
+        # every round. The superstep additionally donates the scan carry's
+        # PRNG key. The undonated bodies stay reachable for tests/benchmarks.
         self._round_body = body
         self._superstep_body = sbody
-        self._round_jit = jax.jit(body, donate_argnums=(0,))
-        self._superstep_jit = jax.jit(sbody, donate_argnums=(0, 1))
+        self._round_jit = jax.jit(body, donate_argnums=(0, 1))
+        self._superstep_jit = jax.jit(sbody, donate_argnums=(0, 1, 2))
+
+    # -- declarative construction ------------------------------------------
+
+    @classmethod
+    def from_spec(
+        cls,
+        spec,
+        client_data: Sequence[Tuple[np.ndarray, Optional[np.ndarray]]],
+        *,
+        loss_fn: Optional[Callable] = None,
+        init_params=None,
+        eval_fn: Optional[Callable] = None,
+        mesh=None,
+        model_kwargs: Optional[Dict[str, Any]] = None,
+    ) -> "RoundEngine":
+        """Construct an engine from a declarative ``repro.specs
+        .ExperimentSpec`` — the composable front door: every knob that used
+        to be a constructor kwarg (codec, strategy, mesh axis, device
+        sampling, superstep width, interpret, accum dtype) is a spec field
+        with a JSON round-trip, so examples, benchmarks, scripts and tests
+        all construct engines the same way (docs/engine.md "Constructing
+        engines").
+
+        ``client_data`` stays an argument (specs describe experiments, not
+        datasets); ``loss_fn``/``init_params`` default to building
+        ``spec.model`` and initializing it from ``spec.fedavg.seed``
+        (``model_kwargs`` override model fields resolved only at data time,
+        e.g. a corpus vocab size). ``mesh`` defaults to a fresh one-axis
+        client mesh over all local devices when ``spec.execution
+        .mesh_axes`` names an axis."""
+        if loss_fn is None or init_params is None:
+            model = spec.build_model(**(model_kwargs or {}))
+            loss_fn = loss_fn if loss_fn is not None else model.loss
+            if init_params is None:
+                init_params = model.init(
+                    jax.random.PRNGKey(spec.fedavg.seed)
+                )
+        ex = spec.execution
+        client_axis = "clients"
+        if ex.mesh_axes is not None:
+            client_axis = ex.mesh_axes
+            if mesh is None:
+                from repro.launch.mesh import make_client_mesh
+
+                mesh = make_client_mesh(axis=ex.mesh_axes)
+        return cls(
+            loss_fn,
+            init_params,
+            client_data,
+            spec.fedavg,
+            eval_fn,
+            codec=spec.build_codec(),
+            strategy=spec.build_strategy(),
+            interpret=ex.interpret,
+            accum_dtype=jnp.dtype(ex.accum_dtype),
+            mesh=mesh,
+            client_axis=client_axis,
+            device_sampling=ex.device_sampling,
+            rounds_per_step=ex.rounds_per_step,
+        )
 
     # -- introspection ----------------------------------------------------
 
@@ -439,11 +559,11 @@ class RoundEngine:
         return jnp.asarray(ids, jnp.int32), jnp.asarray(valid), key, lr
 
     def round(self) -> Dict[str, float]:
-        """One synchronous FedAvg round; returns {'loss': ...}."""
+        """One synchronous round; returns {'loss': ...}."""
         ids, valid, key, lr = self._next_round_inputs()
-        self.params, loss = self._round_jit(
-            self.params, self._x, self._y, self._counts, self._spe,
-            ids, valid, key, lr,
+        self.params, self.outer_state, loss = self._round_jit(
+            self.params, self.outer_state, self._x, self._y, self._counts,
+            self._spe, ids, valid, key, lr,
         )
         self.round_idx += 1
         return {"loss": loss}
@@ -454,7 +574,11 @@ class RoundEngine:
         """``None`` auto-selects: legacy numpy-stream engines stay
         per-round; device-sampling engines superstep at the evaluation
         granularity (``eval_every``, the most often the host needs control
-        back), or the whole run when there is nothing to evaluate."""
+        back), or the whole run when there is nothing to evaluate. An
+        engine-level default (``RoundEngine(rounds_per_step=...)`` — the
+        ``ExperimentSpec.execution`` path) fills in before auto-selection."""
+        if rounds_per_step is None:
+            rounds_per_step = self.default_rounds_per_step
         if rounds_per_step is None:
             if not self.device_sampling:
                 return 1
@@ -480,9 +604,11 @@ class RoundEngine:
         lrs = jnp.asarray(
             [self.lr_at(self.round_idx + i) for i in range(r)], jnp.float32
         )
-        self.params, self.sample_key, losses = self._superstep_jit(
-            self.params, self.sample_key, self._x, self._y, self._counts,
-            self._spe, lrs,
+        self.params, self.outer_state, self.sample_key, losses = (
+            self._superstep_jit(
+                self.params, self.outer_state, self.sample_key, self._x,
+                self._y, self._counts, self._spe, lrs,
+            )
         )
         losses = np.asarray(jax.block_until_ready(losses))
         self.round_idx += r
@@ -592,25 +718,31 @@ class RoundEngine:
     # -- checkpoint / resume ----------------------------------------------
 
     def save(self, ckpt_dir) -> str:
-        """Checkpoint (params, round_idx, client-sampling RNG state) via
-        ``checkpoint.io``. The numpy bit-generator state rides in the
-        msgpack metadata as JSON (its 128-bit PCG integers overflow
-        msgpack's int range); the on-device sampling key (the superstep
-        scan carry) rides as its raw uint32 words. Restoring both means a
-        resumed engine reproduces the uninterrupted run's cohort stream
-        bit-for-bit in either sampling mode — including resuming at a
-        superstep boundary mid-run."""
+        """Checkpoint (params, strategy state, round_idx, client-sampling
+        RNG state) via ``checkpoint.io``. The numpy bit-generator state
+        rides in the msgpack metadata as JSON (its 128-bit PCG integers
+        overflow msgpack's int range); the on-device sampling key (the
+        superstep scan carry) rides as its raw uint32 words. Restoring both
+        means a resumed engine reproduces the uninterrupted run's cohort
+        stream bit-for-bit in either sampling mode — including resuming at
+        a superstep boundary mid-run. The server strategy's state tree
+        (e.g. FedAvgM's velocity) checkpoints alongside the params, and the
+        strategy's serialized identity is recorded so ``restore`` can
+        refuse a mismatched engine."""
         import json
 
         from repro.checkpoint.io import save_checkpoint
 
         return save_checkpoint(
-            ckpt_dir, self.params, step=self.round_idx,
+            ckpt_dir,
+            {"params": self.params, "strategy_state": self.outer_state},
+            step=self.round_idx,
             metadata={
                 "round_idx": self.round_idx,
                 "rng_state": json.dumps(self.rng.bit_generator.state),
                 "sample_key": [int(v) for v in np.asarray(self.sample_key)],
                 "device_sampling": self.device_sampling,
+                "strategy": self.strategy.name,
             },
         )
 
@@ -620,14 +752,27 @@ class RoundEngine:
         Returns the restored round index."""
         import json
 
-        from repro.checkpoint.io import restore_checkpoint
+        from repro.checkpoint.io import (
+            latest_step,
+            peek_metadata,
+            restore_checkpoint,
+        )
 
-        restored, meta = restore_checkpoint(ckpt_dir, self.params, step=step)
+        # Pin the step ONCE: with step=None, letting peek_metadata and
+        # restore_checkpoint each resolve "latest" independently races a
+        # concurrent saver — the guards could validate step N while the
+        # arrays load from a just-written N+1.
+        if step is None:
+            step = latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+        # Guards run against the metadata alone, BEFORE any array restore
+        # mutates engine state: a half-applied restore would be worse than
+        # a refused one.
+        meta = peek_metadata(ckpt_dir, step=step)
         if "device_sampling" in meta and (
             bool(meta["device_sampling"]) != self.device_sampling
         ):
-            # Raise BEFORE mutating any engine state: a half-applied
-            # restore would be worse than a refused one.
             raise ValueError(
                 f"checkpoint was written by a device_sampling="
                 f"{bool(meta['device_sampling'])} engine but this engine has "
@@ -635,6 +780,39 @@ class RoundEngine:
                 "sampling modes would silently continue with a different "
                 "cohort stream and break bit-for-bit resume"
             )
+        recorded = meta.get("strategy")
+        if recorded is not None and recorded != self.strategy.name:
+            # Same pattern as the sampling-mode guard: resuming FedAvgM
+            # velocity into a FedAvg engine (or vice versa, or across
+            # hyper-parameters) would silently continue a DIFFERENT
+            # algorithm from round round_idx on.
+            raise ValueError(
+                f"checkpoint was written by a {recorded} engine but this "
+                f"engine runs {self.strategy.name} — restoring across server "
+                "strategies would silently continue a different algorithm"
+            )
+        if recorded is None:
+            # Pre-strategy checkpoint (params-only tree): only an identity
+            # strategy can resume it — there is no recorded state for a
+            # stateful one to pick up.
+            if jax.tree.leaves(self.outer_state):
+                raise ValueError(
+                    "checkpoint predates server strategies (no recorded "
+                    f"strategy state) but this engine runs "
+                    f"{self.strategy.name}, which carries state — resume it "
+                    "with a FedAvg/FedSGD engine instead"
+                )
+            restored, meta = restore_checkpoint(
+                ckpt_dir, self.params, step=step
+            )
+        else:
+            tree, meta = restore_checkpoint(
+                ckpt_dir,
+                {"params": self.params, "strategy_state": self.outer_state},
+                step=step,
+            )
+            restored = tree["params"]
+            self.outer_state = tree["strategy_state"]
         self.params = restored
         self.round_idx = int(meta["round_idx"])
         self.rng.bit_generator.state = json.loads(meta["rng_state"])
@@ -648,6 +826,7 @@ class RoundEngine:
 
             rep = NamedSharding(self.mesh, P())
             self.params = jax.device_put(self.params, rep)
+            self.outer_state = jax.device_put(self.outer_state, rep)
             self.sample_key = jax.device_put(self.sample_key, rep)
         return self.round_idx
 
@@ -724,8 +903,9 @@ def _assemble_batches(px, py, counts, spe_arr, ids, key, *, E, spe, B,
 
 
 def _engine_round(
-    loss_fn, params, px, py, counts, spe_arr, ids, valid, key, lr,
-    *, E, spe, B, has_labels, codec, interpret, accum_dtype, axis_name=None,
+    loss_fn, params, outer, px, py, counts, spe_arr, ids, valid, key, lr,
+    *, E, spe, B, has_labels, codec, strategy, interpret, accum_dtype,
+    axis_name=None,
 ):
     # Under shard_map ``ids``/``valid`` are this shard's (m/D,) cohort
     # slice; the shard's global slot offset keys all per-client randomness
@@ -742,7 +922,7 @@ def _engine_round(
     if codec is None:
         step = build_simulation_round_step(
             loss_fn, interpret=interpret, accum_dtype=accum_dtype,
-            axis_name=axis_name,
+            axis_name=axis_name, strategy=strategy,
         )
         codec_key = None
     else:
@@ -750,28 +930,31 @@ def _engine_round(
 
         step = build_compressed_round_step(
             loss_fn, codec, interpret=interpret, accum_dtype=accum_dtype,
-            axis_name=axis_name,
+            axis_name=axis_name, strategy=strategy,
         )
         # Decorrelate the codec stream from the batch-permutation stream
         # (whose keys fold in global cohort slots above).
         codec_key = jax.random.fold_in(key, 0x5EED)
     state, metrics = step(
-        RoundState(params), RoundBatch(batch, mask, w, lr=lr, key=codec_key)
+        RoundState(params, outer_state=outer),
+        RoundBatch(batch, mask, w, lr=lr, key=codec_key),
     )
-    return state.params, metrics["loss"]
+    return state.params, state.outer_state, metrics["loss"]
 
 
 def _engine_superstep(
-    loss_fn, params, key, px, py, counts, spe_arr, lrs,
-    *, K, m, shards, E, spe, B, has_labels, codec, interpret, accum_dtype,
-    axis_name=None,
+    loss_fn, params, outer, key, px, py, counts, spe_arr, lrs,
+    *, K, m, shards, E, spe, B, has_labels, codec, strategy, interpret,
+    accum_dtype, axis_name=None,
 ):
     """R = len(lrs) full rounds fused into one ``lax.scan``: per round, the
     carry key splits into (cohort draw, data/codec key, next carry) exactly
     as the eager ``_next_round_inputs`` device branch does, the cohort is
     drawn on device (``sample_clients_device`` + static ghost padding), and
-    ``_engine_round`` — the identical per-round body, codec and all — runs
-    on it. Returns (params, advanced key, (R,) per-round losses).
+    ``_engine_round`` — the identical per-round body, codec, server
+    strategy and all — runs on it. The strategy state rides in the scan
+    carry next to the params. Returns (params, strategy state, advanced
+    key, (R,) per-round losses).
 
     Under cohort sharding this whole function sits INSIDE the shard_map:
     every shard replays the (replicated) cohort draw and slices its own
@@ -783,7 +966,7 @@ def _engine_superstep(
     m_local = m_pad // shards
 
     def one_round(carry, lr):
-        p, k = carry
+        p, o, k = carry
         k_cohort, k_data, k_next = jax.random.split(k, 3)
         ids = sample_clients_device(k_cohort, K, m)
         ids, valid = pad_cohort_device(ids, shards)
@@ -791,12 +974,15 @@ def _engine_superstep(
             d = jax.lax.axis_index(axis_name)
             ids = jax.lax.dynamic_slice_in_dim(ids, d * m_local, m_local)
             valid = jax.lax.dynamic_slice_in_dim(valid, d * m_local, m_local)
-        new_p, loss = _engine_round(
-            loss_fn, p, px, py, counts, spe_arr, ids, valid, k_data, lr,
+        new_p, new_o, loss = _engine_round(
+            loss_fn, p, o, px, py, counts, spe_arr, ids, valid, k_data, lr,
             E=E, spe=spe, B=B, has_labels=has_labels, codec=codec,
-            interpret=interpret, accum_dtype=accum_dtype, axis_name=axis_name,
+            strategy=strategy, interpret=interpret, accum_dtype=accum_dtype,
+            axis_name=axis_name,
         )
-        return (new_p, k_next), loss
+        return (new_p, new_o, k_next), loss
 
-    (params, key), losses = jax.lax.scan(one_round, (params, key), lrs)
-    return params, key, losses
+    (params, outer, key), losses = jax.lax.scan(
+        one_round, (params, outer, key), lrs
+    )
+    return params, outer, key, losses

@@ -88,16 +88,57 @@ class FederatedTrainer:
         mesh=None,
         client_axis: str = "clients",
         device_sampling: bool = False,
+        strategy=None,
+        interpret: Optional[bool] = None,
+        accum_dtype=jnp.float32,
     ):
-        self.engine = RoundEngine(
+        # Regression (PR 5): the trainer used to accept neither interpret=
+        # nor accum_dtype=, so callers could not reach those engine knobs
+        # through the compatibility wrapper; every engine kwarg now threads
+        # through verbatim (tests/test_spec.py pins it).
+        engine = RoundEngine(
             loss_fn, init_params, client_data, cfg, eval_fn, codec=codec,
+            strategy=strategy, interpret=interpret, accum_dtype=accum_dtype,
             mesh=mesh, client_axis=client_axis,
             device_sampling=device_sampling,
         )
-        self.loss_fn = loss_fn
+        self._wrap(engine, client_data)
+
+    def _wrap(self, engine: RoundEngine, client_data) -> None:
+        """The single place trainer attributes are set — __init__ and
+        from_spec both land here, so the two construction paths cannot
+        drift (the interpret=/accum_dtype= hole this PR fixed was exactly
+        such a divergence)."""
+        self.engine = engine
+        self.loss_fn = engine.loss_fn
         self.client_data = list(client_data)
-        self.cfg = cfg
-        self.eval_fn = eval_fn
+        self.cfg = engine.cfg
+        self.eval_fn = engine.eval_fn
+
+    @classmethod
+    def from_spec(
+        cls,
+        spec,
+        client_data: Sequence[Tuple[np.ndarray, Optional[np.ndarray]]],
+        *,
+        loss_fn: Optional[Callable] = None,
+        init_params=None,
+        eval_fn: Optional[Callable] = None,
+        mesh=None,
+        model_kwargs=None,
+    ) -> "FederatedTrainer":
+        """Declarative construction mirroring
+        :meth:`repro.core.engine.RoundEngine.from_spec`: same spec, same
+        engine, wrapped in the legacy trainer API."""
+        self = cls.__new__(cls)
+        self._wrap(
+            RoundEngine.from_spec(
+                spec, client_data, loss_fn=loss_fn, init_params=init_params,
+                eval_fn=eval_fn, mesh=mesh, model_kwargs=model_kwargs,
+            ),
+            client_data,
+        )
+        return self
 
     @property
     def params(self):

@@ -1,0 +1,185 @@
+"""Pluggable server strategies: the server's update rule as a seam.
+
+Algorithm 1 fixes the server step to weighted parameter averaging, but the
+follow-up literature (Konečný et al. 2016, "Federated Optimization"; Li et
+al. 2019, "Federated Learning: Challenges, Methods, and Future Directions")
+frames that step as a pluggable OPTIMIZER over the aggregated client delta
+
+    Δ_t = Σ_k (n_k / n) (w_k - w_t)        (the "pseudo-gradient")
+
+so FedAvg is just the identity special case  w_{t+1} = w_t + Δ_t, and
+server momentum, adaptive server optimizers, etc. drop in without touching
+the round pipeline. ``RoundEngine(strategy=...)`` threads the strategy
+through every execution lane — the plain jitted round, the compressed-codec
+round, the cohort-sharded ``shard_map`` round (strategy applied AFTER the
+psum, so every shard steps the replicated global params identically), and
+the superstep ``lax.scan`` (strategy state rides in the scan carry) — and
+``save``/``restore`` checkpoint the state.
+
+The protocol (see docs/strategies.md for the how-to-add-one guide)::
+
+    class MyStrategy(ServerStrategy):
+        kind = "mine"
+        def init_state(self, params) -> opt_state: ...
+        def apply(self, opt_state, params, agg_delta) -> (opt_state, params)
+
+- ``init_state`` runs ONCE at engine construction; the returned pytree is
+  the strategy's persistent server state (``RoundState.outer_state``).
+- ``apply`` runs inside the jitted round: pure, traced, no data-dependent
+  Python. ``agg_delta`` is the fp32 weighted-mean client delta (weights
+  already normalized by ``server_aggregate``/``decode_aggregate``); the
+  returned params must keep the input params' dtypes (cast per leaf).
+- Strategies are frozen dataclasses: hyper-parameters are fields, ``kind``
+  is a ClassVar registry key, and ``strategy_to_json``/
+  ``strategy_from_json`` round-trip them for ``ExperimentSpec`` and the
+  checkpoint mismatch guard.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, ClassVar, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+
+class ServerStrategy:
+    """Base class / protocol. Subclass as a frozen dataclass, set ``kind``,
+    and implement ``apply`` (and ``init_state`` if you carry state)."""
+
+    kind: ClassVar[str] = "base"
+
+    def init_state(self, params) -> Any:
+        """Server optimizer state, built once from the initial params.
+        Stateless strategies return ``()`` — no leaves, so it costs nothing
+        in the scan carry or the checkpoint."""
+        return ()
+
+    def apply(self, opt_state, params, agg_delta) -> Tuple[Any, Any]:
+        """One server step: consume the aggregated fp32 client delta and
+        return ``(new_opt_state, new_params)``. Runs inside the round
+        executable — must be pure and traceable."""
+        raise NotImplementedError
+
+    def validate_cfg(self, cfg) -> None:
+        """Hook for strategies that constrain the client-side config
+        (``FedSGD`` pins E=1, B=None). Called at engine construction."""
+
+    @property
+    def name(self) -> str:
+        """Canonical serialized form — the checkpoint guard compares this."""
+        return json.dumps(strategy_to_json(self), sort_keys=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvg(ServerStrategy):
+    """The paper's server step: ``w <- w + Δ`` (identity over the
+    aggregated delta). Stateless; the engine default."""
+
+    kind: ClassVar[str] = "fedavg"
+
+    def apply(self, opt_state, params, agg_delta):
+        new_params = jax.tree.map(
+            lambda p, d: (p + d).astype(p.dtype), params, agg_delta
+        )
+        return opt_state, new_params
+
+
+@dataclasses.dataclass(frozen=True)
+class FedSGD(FedAvg):
+    """FedSGD as a declarative preset, not cfg folklore.
+
+    The server step is identical to :class:`FedAvg` (Section 2 of the
+    paper: FedSGD == FedAvg at E=1, B=∞, where the averaged delta IS the
+    global-batch gradient step), but constructing an engine with this
+    strategy asserts the client config actually is the FedSGD endpoint —
+    so a spec that *says* fedsgd cannot silently run multi-epoch local
+    SGD. Compare ``core.fedsgd_config``, which builds the config; this
+    names the algorithm."""
+
+    kind: ClassVar[str] = "fedsgd"
+
+    def validate_cfg(self, cfg) -> None:
+        if cfg.E != 1 or cfg.B is not None:
+            raise ValueError(
+                f"FedSGD strategy requires the paper's E=1, B=None (full "
+                f"local batch) client config, got E={cfg.E}, B={cfg.B} — "
+                "use fedsgd_config(), or switch the strategy to FedAvg()"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvgM(ServerStrategy):
+    """Server momentum over the aggregated delta (Hsu et al. 2019's
+    FedAvgM): ``v <- momentum * v + Δ;  w <- w + server_lr * v``.
+
+    ``momentum=0, server_lr=1`` reproduces :class:`FedAvg` bit for bit
+    (``0*v + Δ == Δ`` and ``1.0*v`` is exact in IEEE arithmetic) — pinned
+    by tests/test_strategies.py. The velocity tree is kept in fp32
+    regardless of the params dtype, mirroring the fp32 ``accum_dtype``
+    contract of the aggregation kernels."""
+
+    momentum: float = 0.9
+    server_lr: float = 1.0
+    kind: ClassVar[str] = "fedavgm"
+
+    def init_state(self, params):
+        return jax.tree.map(
+            lambda p: jnp.zeros(jnp.shape(p), jnp.float32), params
+        )
+
+    def apply(self, opt_state, params, agg_delta):
+        v = jax.tree.map(
+            lambda v, d: self.momentum * v + d.astype(jnp.float32),
+            opt_state, agg_delta,
+        )
+        new_params = jax.tree.map(
+            lambda p, vv: (p + self.server_lr * vv).astype(p.dtype),
+            params, v,
+        )
+        return v, new_params
+
+
+STRATEGIES: Dict[str, type] = {
+    FedAvg.kind: FedAvg,
+    FedSGD.kind: FedSGD,
+    FedAvgM.kind: FedAvgM,
+}
+
+
+def strategy_to_json(strategy: ServerStrategy) -> Dict[str, Any]:
+    """``{"kind": ..., **hyper_params}`` — the ``ExperimentSpec`` wire form."""
+    return {"kind": strategy.kind, **dataclasses.asdict(strategy)}
+
+
+def strategy_from_json(d: Dict[str, Any]) -> ServerStrategy:
+    d = dict(d)
+    kind = d.pop("kind")
+    if kind not in STRATEGIES:
+        raise ValueError(
+            f"unknown server strategy {kind!r}; known: {sorted(STRATEGIES)}"
+        )
+    return STRATEGIES[kind](**d)
+
+
+def resolve_strategy(
+    strategy: Union[None, str, ServerStrategy]
+) -> ServerStrategy:
+    """None -> FedAvg(); a registry name -> that strategy with defaults;
+    an instance passes through. The engine-constructor convenience."""
+    if strategy is None:
+        return FedAvg()
+    if isinstance(strategy, str):
+        if strategy not in STRATEGIES:
+            raise ValueError(
+                f"unknown server strategy {strategy!r}; "
+                f"known: {sorted(STRATEGIES)}"
+            )
+        return STRATEGIES[strategy]()
+    if not isinstance(strategy, ServerStrategy):
+        raise TypeError(
+            f"strategy must be None, a registry name, or a ServerStrategy, "
+            f"got {type(strategy).__name__}"
+        )
+    return strategy

@@ -1,0 +1,8 @@
+from repro.specs.spec import (
+    CodecSpec,
+    ExecutionSpec,
+    ExperimentSpec,
+    ModelSpec,
+    PartitionSpec,
+)
+from repro.specs.presets import PAPER_SPECS, get_spec, list_specs

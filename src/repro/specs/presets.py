@@ -1,0 +1,103 @@
+"""The ``specs/`` registry: paper presets as ExperimentSpec values.
+
+One entry per cell of the paper's main grid (Section 3: 2NN/CNN x
+IID/pathological-non-IID, plus the Shakespeare character LSTM), plus the
+post-paper scenario presets that earlier PRs grew as constructor kwargs —
+FedSGD baseline, quantized uploads, server momentum, the superstep lane.
+Examples, benchmarks and scripts construct engines from these via
+``RoundEngine.from_spec`` so the whole grid is enumerable from code
+(``scripts/build_experiments_md.py`` renders it, and exports each preset
+to ``specs/<name>.json`` — the JSON files are the wire form of exactly
+these values, pinned by tests/test_spec.py).
+
+Hyper-parameters follow the paper (C=0.1, E=5, B=10 for MNIST FedAvg;
+E=1, B=inf for FedSGD; lr 1.47 for the character LSTM). ``rounds`` /
+``target_acc`` are CI-scale defaults for the synthetic stand-in datasets,
+not paper budgets — pass your own to ``run()`` for paper-scale sweeps.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.fedavg import FedAvgConfig
+from repro.core.strategies import FedAvgM, FedSGD
+from repro.data.synthetic import CHAR_VOCAB_SIZE
+from repro.specs.spec import (
+    CodecSpec,
+    ExecutionSpec,
+    ExperimentSpec,
+    ModelSpec,
+    PartitionSpec,
+)
+
+_MNIST_FEDAVG = FedAvgConfig(C=0.1, E=5, B=10, lr=0.1, seed=0)
+_MNIST_FEDSGD = FedAvgConfig(C=0.1, E=1, B=None, lr=0.5, seed=0)
+
+
+def _mnist(name: str, model: str, partition: str, **kw) -> ExperimentSpec:
+    return ExperimentSpec(
+        name=name,
+        model=ModelSpec(model),
+        partition=PartitionSpec(partition, n_clients=100),
+        fedavg=kw.pop("fedavg", _MNIST_FEDAVG),
+        rounds=kw.pop("rounds", 100),
+        target_acc=kw.pop("target_acc", 0.9),
+        **kw,
+    )
+
+
+PAPER_SPECS: Dict[str, ExperimentSpec] = {
+    s.name: s
+    for s in [
+        # -- the paper's main MNIST grid (Table 1 / Figure 2) -------------
+        _mnist("mnist_2nn_iid", "mnist_2nn", "iid"),
+        _mnist("mnist_2nn_noniid", "mnist_2nn", "pathological_noniid"),
+        _mnist("mnist_cnn_iid", "mnist_cnn", "iid"),
+        _mnist("mnist_cnn_noniid", "mnist_cnn", "pathological_noniid"),
+        # -- the FedSGD baseline, as a named strategy preset ---------------
+        _mnist(
+            "mnist_2nn_fedsgd", "mnist_2nn", "iid",
+            fedavg=_MNIST_FEDSGD, strategy=FedSGD(), rounds=300,
+        ),
+        # -- the Shakespeare character LSTM (Section 3, LSTM column) ------
+        ExperimentSpec(
+            name="shakespeare_lstm",
+            model=ModelSpec(
+                "char_lstm",
+                kwargs={"vocab_size": CHAR_VOCAB_SIZE, "hidden": 128},
+            ),
+            # One client per speaking role: the data arrives federated.
+            partition=PartitionSpec("natural", n_clients=1146),
+            fedavg=FedAvgConfig(C=0.1, E=5, B=10, lr=1.47, seed=0),
+            rounds=40,
+            target_acc=None,
+        ),
+        # -- post-paper scenario presets -----------------------------------
+        _mnist(
+            "mnist_2nn_noniid_q8", "mnist_2nn", "pathological_noniid",
+            codec=CodecSpec("quantize", bits=8),
+        ),
+        _mnist(
+            "mnist_2nn_noniid_fedavgm", "mnist_2nn", "pathological_noniid",
+            strategy=FedAvgM(momentum=0.9),
+        ),
+        _mnist(
+            "mnist_2nn_iid_superstep", "mnist_2nn", "iid",
+            execution=ExecutionSpec(
+                device_sampling=True, rounds_per_step=20
+            ),
+        ),
+    ]
+}
+
+
+def get_spec(name: str) -> ExperimentSpec:
+    if name not in PAPER_SPECS:
+        raise KeyError(
+            f"unknown experiment spec {name!r}; known: {list_specs()}"
+        )
+    return PAPER_SPECS[name]
+
+
+def list_specs() -> List[str]:
+    return sorted(PAPER_SPECS)

@@ -179,8 +179,9 @@ def test_engine_round_matches_reference_on_same_batches(rng):
     client_params, _ = upd(batch, mask)
     want = tree_weighted_mean(client_params, w)
 
-    got, loss = eng._round_jit(
-        eng.params, eng._x, eng._y, eng._counts, eng._spe, ids, valid, key, lr
+    got, _, loss = eng._round_jit(
+        eng.params, eng.outer_state, eng._x, eng._y, eng._counts, eng._spe,
+        ids, valid, key, lr,
     )
     assert np.isfinite(float(loss))
     for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
@@ -261,10 +262,12 @@ def test_round_jit_donation_no_warning_and_unchanged(rng):
     ids, valid, key, lr = eng._next_round_inputs()
     args = (eng._x, eng._y, eng._counts, eng._spe, ids, valid, key, lr)
     # Undonated reference first — it leaves eng.params alive.
-    want, want_loss = jax.jit(eng._round_body)(eng.params, *args)
+    want, _, want_loss = jax.jit(eng._round_body)(
+        eng.params, eng.outer_state, *args
+    )
     with warnings.catch_warnings():
         warnings.filterwarnings("error", message=".*[Dd]onat.*")
-        got, got_loss = eng._round_jit(eng.params, *args)
+        got, _, got_loss = eng._round_jit(eng.params, eng.outer_state, *args)
     assert float(got_loss) == float(want_loss)
     for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

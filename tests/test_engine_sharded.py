@@ -92,7 +92,7 @@ def test_sharded_fedavg_aggregate_matches_oracle(rng, K_per_shard):
 # ---------------------------------------------------------------------------
 
 def _equiv_case(rng, codec, n_rounds, param_atol, loss_atol, sizes=None,
-                C=0.75):
+                C=0.75, strategy=None):
     """Run the same config sharded (mesh over all devices) and unsharded;
     compare the loss trajectory round for round and the final params."""
     sizes = sizes or [9, 24, 17, 40, 8, 33, 21, 14]
@@ -100,9 +100,10 @@ def _equiv_case(rng, codec, n_rounds, param_atol, loss_atol, sizes=None,
     model = mnist_2nn(n_classes=5, d_in=12)
     params = model.init(jax.random.PRNGKey(0))
     cfg = FedAvgConfig(C=C, E=2, B=8, lr=0.2, seed=7)
-    base = RoundEngine(model.loss, params, clients, cfg, codec=codec)
+    base = RoundEngine(model.loss, params, clients, cfg, codec=codec,
+                       strategy=strategy)
     shrd = RoundEngine(model.loss, params, clients, cfg, codec=codec,
-                       mesh=make_client_mesh())
+                       strategy=strategy, mesh=make_client_mesh())
     h_base = base.run(n_rounds)
     h_shrd = shrd.run(n_rounds)
     for rb, rs in zip(h_base.records, h_shrd.records):
@@ -132,6 +133,20 @@ def test_sharded_engine_matches_unsharded_quantize_codec(rng):
     shrd = _equiv_case(rng, quantize_codec(8, chunk=256), n_rounds=4,
                        param_atol=1e-3, loss_atol=1e-4)
     assert shrd.num_compilations <= 2
+
+
+def test_sharded_engine_matches_unsharded_fedavgm(rng):
+    """Server-strategy seam under shard_map: FedAvgM applies AFTER the
+    psum, so every shard steps the replicated velocity and params
+    identically — sharded == unsharded at fp32 tolerance, and the strategy
+    state itself stays replicated (same leaves on every shard)."""
+    from repro.core.strategies import FedAvgM
+
+    shrd = _equiv_case(rng, None, n_rounds=4, param_atol=1e-5,
+                       loss_atol=1e-5, strategy=FedAvgM(momentum=0.9))
+    assert shrd.num_compilations <= 2
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree.leaves(shrd.outer_state))
 
 
 def test_sharded_engine_matches_unsharded_identity_codec(rng):

@@ -1,0 +1,281 @@
+"""ExperimentSpec: the declarative front door (repro/specs) and its
+equivalence contract with kwarg construction.
+
+The PR's acceptance bar: ``ExperimentSpec -> to_json -> from_json ->
+RoundEngine.from_spec`` must produce an engine whose first 5 rounds match
+the kwarg-constructed engine BIT FOR BIT on every execution lane — plain,
+codec, device-sampling superstep, and cohort-sharded (D = however many
+devices the backend exposes; the tier1-sharded CI lane forces 8). Plus the
+FederatedTrainer passthrough regression (interpret=/accum_dtype= used to
+be silently unreachable through the wrapper) and the ``specs/`` JSON
+registry staying in sync with the Python presets.
+"""
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FedAvgConfig,
+    FedAvgM,
+    FederatedTrainer,
+    RoundEngine,
+    quantize_codec,
+)
+from repro.launch.mesh import make_client_mesh
+from repro.models import mnist_2nn
+from repro.specs import (
+    PAPER_SPECS,
+    CodecSpec,
+    ExecutionSpec,
+    ExperimentSpec,
+    ModelSpec,
+    PartitionSpec,
+    get_spec,
+    list_specs,
+)
+
+D = len(jax.devices())
+
+
+def _clients(seed=1234, sizes=(16, 8, 24, 16), d=16, classes=5):
+    rng = np.random.default_rng(seed)
+    return [
+        (rng.normal(size=(n, d)).astype(np.float32),
+         rng.integers(0, classes, n).astype(np.int32))
+        for n in sizes
+    ]
+
+
+_MODEL = ModelSpec("mnist_2nn", kwargs={"n_classes": 5, "d_in": 16})
+_CFG = FedAvgConfig(C=0.5, E=2, B=8, lr=0.1, seed=0)
+
+
+def _spec(**kw):
+    return ExperimentSpec(
+        name=kw.pop("name", "test_spec"),
+        model=kw.pop("model", _MODEL),
+        partition=kw.pop("partition", PartitionSpec("iid", n_clients=4)),
+        fedavg=kw.pop("fedavg", _CFG),
+        **kw,
+    )
+
+
+def _assert_rounds_identical(a: RoundEngine, b: RoundEngine, n=5):
+    for rnd in range(n):
+        la, lb = a.round()["loss"], b.round()["loss"]
+        assert float(la) == float(lb), f"loss diverged at round {rnd}"
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# json round-trip
+# ---------------------------------------------------------------------------
+
+def test_spec_json_round_trip_all_presets():
+    for name in list_specs():
+        spec = get_spec(name)
+        back = ExperimentSpec.from_json(spec.to_json())
+        assert back == spec, name
+        # and the wire form is stable (serialize twice -> same bytes)
+        assert back.to_json() == spec.to_json(), name
+
+
+def test_spec_json_round_trip_fancy_fields():
+    spec = _spec(
+        strategy=FedAvgM(momentum=0.37, server_lr=2.0),
+        codec=CodecSpec("quantize", bits=4, chunk=256),
+        execution=ExecutionSpec(mesh_axes="clients", device_sampling=True,
+                                rounds_per_step=7, interpret=True,
+                                accum_dtype="bfloat16"),
+        rounds=42, target_acc=0.5,
+    )
+    back = ExperimentSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.strategy == FedAvgM(momentum=0.37, server_lr=2.0)
+
+
+def test_spec_callable_lr_refuses_serialization():
+    spec = _spec(fedavg=FedAvgConfig(C=0.5, E=1, B=8, lr=lambda r: 0.1))
+    with pytest.raises(ValueError, match="callable lr"):
+        spec.to_json()
+
+
+def test_spec_is_frozen():
+    spec = _spec()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.name = "mutated"
+
+
+def test_unknown_kinds_raise():
+    with pytest.raises(ValueError, match="unknown model kind"):
+        ModelSpec("resnet9000").build()
+    with pytest.raises(ValueError, match="unknown partition kind"):
+        PartitionSpec("sorted_by_vibes").build(n_examples=10)
+    with pytest.raises(ValueError, match="unknown codec kind"):
+        CodecSpec("gzip").build()
+
+
+def test_partition_spec_builds_every_kind():
+    labels = np.repeat(np.arange(5), 20).astype(np.int32)
+    for kind in ["iid", "pathological_noniid", "unbalanced", "dirichlet"]:
+        fed = PartitionSpec(kind, n_clients=5, seed=0).build(labels=labels)
+        assert fed.num_clients == 5
+        assert sum(len(ix) for ix in fed.client_indices) == len(labels)
+    with pytest.raises(ValueError, match="natural"):
+        PartitionSpec("natural").build(n_examples=10)
+
+
+# ---------------------------------------------------------------------------
+# from_spec == kwargs, bit for bit, on all four execution lanes
+# ---------------------------------------------------------------------------
+
+def _engines_for_lane(lane):
+    clients = _clients()
+    model = mnist_2nn(n_classes=5, d_in=16)
+    params = model.init(jax.random.PRNGKey(_CFG.seed))
+    kw = dict(codec=None, device_sampling=False, mesh=None)
+    spec_kw = {}
+    if lane == "codec":
+        kw["codec"] = quantize_codec(8, chunk=256)
+        spec_kw["codec"] = CodecSpec("quantize", bits=8, chunk=256)
+    elif lane == "device_sampling":
+        kw["device_sampling"] = True
+        spec_kw["execution"] = ExecutionSpec(device_sampling=True)
+    elif lane == "sharded":
+        kw["mesh"] = make_client_mesh()
+        spec_kw["execution"] = ExecutionSpec(mesh_axes="clients")
+    spec = ExperimentSpec.from_json(_spec(**spec_kw).to_json())
+    by_spec = RoundEngine.from_spec(spec, clients)
+    by_kwargs = RoundEngine(model.loss, params, clients, _CFG, **kw)
+    return by_spec, by_kwargs
+
+
+@pytest.mark.parametrize("lane",
+                         ["plain", "codec", "device_sampling", "sharded"])
+def test_from_spec_matches_kwargs_bit_for_bit(lane):
+    by_spec, by_kwargs = _engines_for_lane(lane)
+    _assert_rounds_identical(by_spec, by_kwargs, n=5)
+    assert by_spec.num_compilations <= 2
+
+
+def test_from_spec_matches_kwargs_superstep_lane():
+    """Device-sampling lane, driven through the superstep executable on the
+    spec side (execution.rounds_per_step is the engine default) and the
+    per-round path on the kwarg side — the two dispatch shapes must agree
+    to fp32 scan tolerance, cohort for cohort."""
+    by_spec, by_kwargs = _engines_for_lane("device_sampling")
+    by_spec.run(4, rounds_per_step=2)
+    for _ in range(4):
+        by_kwargs.round()
+    for x, y in zip(jax.tree.leaves(by_spec.params),
+                    jax.tree.leaves(by_kwargs.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+    assert by_spec.num_compilations <= 2
+
+
+def test_from_spec_threads_execution_knobs():
+    spec = _spec(
+        execution=ExecutionSpec(device_sampling=True, rounds_per_step=3,
+                                interpret=True, accum_dtype="bfloat16"),
+        strategy=FedAvgM(momentum=0.9),
+        codec=CodecSpec("quantize", bits=8, chunk=256),
+    )
+    eng = RoundEngine.from_spec(spec, _clients())
+    assert eng.device_sampling and eng.default_rounds_per_step == 3
+    assert eng.interpret is True
+    assert jnp.dtype(eng.accum_dtype) == jnp.bfloat16
+    assert eng.strategy == FedAvgM(momentum=0.9)
+    assert eng.codec is not None and eng.codec.name == "q8"
+    # the engine default drives run() without an explicit rounds_per_step
+    h = eng.run(6)
+    assert len(h.records) == 6 and eng.num_compilations <= 2
+
+
+def test_from_spec_fedavgm_zero_momentum_matches_fedavg():
+    a = RoundEngine.from_spec(
+        ExperimentSpec.from_json(
+            _spec(strategy=FedAvgM(momentum=0.0)).to_json()
+        ),
+        _clients(),
+    )
+    b = RoundEngine.from_spec(_spec(), _clients())
+    _assert_rounds_identical(a, b, n=5)
+
+
+# ---------------------------------------------------------------------------
+# FederatedTrainer: passthrough regression + from_spec
+# ---------------------------------------------------------------------------
+
+def test_trainer_forwards_interpret_and_accum_dtype():
+    """Regression: the wrapper used to accept neither kwarg, so the engine
+    knobs were unreachable through it."""
+    clients = _clients()
+    model = mnist_2nn(n_classes=5, d_in=16)
+    params = model.init(jax.random.PRNGKey(0))
+    tr = FederatedTrainer(model.loss, params, clients, _CFG,
+                          interpret=True, accum_dtype=jnp.bfloat16,
+                          strategy=FedAvgM(momentum=0.9))
+    assert tr.engine.interpret is True
+    assert jnp.dtype(tr.engine.accum_dtype) == jnp.bfloat16
+    assert tr.engine.strategy == FedAvgM(momentum=0.9)
+    assert np.isfinite(float(tr.engine.round()["loss"]))
+
+
+def test_trainer_from_spec_matches_engine_from_spec():
+    spec = _spec()
+    tr = FederatedTrainer.from_spec(spec, _clients())
+    eng = RoundEngine.from_spec(spec, _clients())
+    _assert_rounds_identical(tr.engine, eng, n=3)
+    assert tr.cfg == spec.fedavg
+
+
+# ---------------------------------------------------------------------------
+# the specs/ registry
+# ---------------------------------------------------------------------------
+
+def test_registry_names_cover_the_paper_grid():
+    for required in ["mnist_2nn_iid", "mnist_2nn_noniid", "mnist_cnn_iid",
+                     "mnist_cnn_noniid", "shakespeare_lstm"]:
+        assert required in PAPER_SPECS
+        assert PAPER_SPECS[required].name == required
+    with pytest.raises(KeyError):
+        get_spec("mnist_3nn")
+
+
+def test_specs_json_files_match_registry():
+    """specs/*.json are the exported wire form of the Python registry
+    (scripts/build_experiments_md.py regenerates them); drift means someone
+    edited one side only."""
+    spec_dir = Path(__file__).resolve().parent.parent / "specs"
+    files = {p.stem: p for p in spec_dir.glob("*.json")}
+    assert set(files) == set(PAPER_SPECS), (
+        "specs/ and repro.specs.presets disagree — rerun "
+        "scripts/build_experiments_md.py"
+    )
+    for name, path in files.items():
+        assert ExperimentSpec.from_json(path.read_text()) == PAPER_SPECS[name]
+
+
+def test_preset_constructs_quickstart_engine():
+    """The quickstart path: a paper preset + replace() overrides drives a
+    real (tiny) run — what examples/quickstart.py does, CI-sized."""
+    spec = dataclasses.replace(
+        get_spec("mnist_2nn_noniid"),
+        model=_MODEL,
+        partition=PartitionSpec("pathological_noniid", n_clients=4,
+                                shards_per_client=2),
+        fedavg=dataclasses.replace(_CFG, C=0.5),
+    )
+    clients = _clients()
+    labels = np.concatenate([y for _, y in clients])
+    fed = spec.build_partition(labels=labels)
+    assert fed.num_clients == 4
+    eng = RoundEngine.from_spec(spec, clients)
+    h = eng.run(2)
+    assert len(h.records) == 2 and np.isfinite(h.records[-1].train_loss)

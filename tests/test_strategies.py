@@ -1,0 +1,299 @@
+"""ServerStrategy: the pluggable server update seam (core/strategies.py).
+
+Covers the PR's strategy acceptance criteria:
+- FedAvgM's update rule matches the hand-rolled momentum recursion;
+- FedAvgM(momentum=0) == FedAvg bit for bit, round for round (the identity
+  special case really is the special case), on the plain AND codec paths;
+- FedSGD is a validated preset: an engine constructed with it refuses a
+  non-(E=1, B=None) client config;
+- num_compilations <= 2 is preserved under every strategy (per-round loop
+  and the superstep scan);
+- FedAvgM converges in fewer rounds than FedAvg on a pinned seeded 2NN
+  config (server momentum actually helps);
+- checkpoint coverage: mid-run save/restore with FedAvgM resumes bit for
+  bit, restore refuses a strategy-mismatched checkpoint, and pre-strategy
+  (params-only) checkpoints restore only into identity-strategy engines.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FedAvg,
+    FedAvgConfig,
+    FedAvgM,
+    FedSGD,
+    RoundEngine,
+    fedsgd_config,
+    identity_codec,
+    make_eval_fn,
+    quantize_codec,
+    resolve_strategy,
+    strategy_from_json,
+    strategy_to_json,
+)
+from repro.models import mnist_2nn
+
+
+def _clients(rng, sizes, d=16, classes=5):
+    return [
+        (rng.normal(size=(n, d)).astype(np.float32),
+         rng.integers(0, classes, n).astype(np.int32))
+        for n in sizes
+    ]
+
+
+def _tiny(rng=None, **engine_kw):
+    # A fixed-seed population (NOT the shared fixture rng): equivalence
+    # tests build engine pairs and need call n and call n+1 to see the
+    # identical clients.
+    clients = _clients(np.random.default_rng(1234), [16, 8, 24, 16])
+    model = mnist_2nn(n_classes=5, d_in=16)
+    params = model.init(jax.random.PRNGKey(0))
+    cfg = engine_kw.pop("cfg", FedAvgConfig(C=0.5, E=2, B=8, lr=0.1, seed=0))
+    return RoundEngine(model.loss, params, clients, cfg, **engine_kw)
+
+
+def _leaves_equal(a, b):
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+# ---------------------------------------------------------------------------
+# strategy semantics (unit level)
+# ---------------------------------------------------------------------------
+
+def test_fedavgm_matches_manual_momentum_recursion(rng):
+    """apply() == the v <- m*v + d; w <- w + lr*v recursion, per leaf."""
+    s = FedAvgM(momentum=0.7, server_lr=0.5)
+    params = {"a": jnp.asarray(rng.normal(size=(3, 2)).astype(np.float32)),
+              "b": jnp.asarray(rng.normal(size=(4,)).astype(np.float32))}
+    state = s.init_state(params)
+    for leaf in jax.tree.leaves(state):
+        assert leaf.dtype == jnp.float32 and not leaf.any()
+    v_ref = {k: np.zeros(np.shape(p), np.float32) for k, p in params.items()}
+    p_ref = {k: np.asarray(p) for k, p in params.items()}
+    for t in range(3):
+        delta = {
+            k: jnp.asarray(rng.normal(size=np.shape(p)).astype(np.float32))
+            for k, p in params.items()
+        }
+        state, params = s.apply(state, params, delta)
+        for k in p_ref:
+            v_ref[k] = 0.7 * v_ref[k] + np.asarray(delta[k])
+            p_ref[k] = p_ref[k] + 0.5 * v_ref[k]
+            np.testing.assert_allclose(np.asarray(params[k]), p_ref[k],
+                                       atol=1e-6)
+            np.testing.assert_allclose(np.asarray(state[k]), v_ref[k],
+                                       atol=1e-6)
+
+
+def test_fedavg_apply_is_identity_over_delta():
+    s = FedAvg()
+    params = {"w": jnp.asarray([1.0, -2.0], jnp.float32)}
+    delta = {"w": jnp.asarray([0.5, 0.25], jnp.float32)}
+    st, out = s.apply((), params, delta)
+    assert st == ()
+    np.testing.assert_array_equal(np.asarray(out["w"]), [1.5, -1.75])
+
+
+def test_strategy_json_round_trip():
+    for s in [FedAvg(), FedSGD(), FedAvgM(momentum=0.37, server_lr=2.0)]:
+        d = strategy_to_json(s)
+        back = strategy_from_json(d)
+        assert back == s and type(back) is type(s)
+    with pytest.raises(ValueError, match="unknown server strategy"):
+        strategy_from_json({"kind": "fedyogi"})
+    assert resolve_strategy(None) == FedAvg()
+    assert resolve_strategy("fedavgm") == FedAvgM()
+    with pytest.raises(TypeError):
+        resolve_strategy(42)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        FedAvgM().momentum = 0.0  # specs must be immutable values
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+def test_fedavgm_zero_momentum_is_fedavg_bit_for_bit(rng):
+    """The identity special case: momentum=0, server_lr=1 replays FedAvg
+    exactly — same cohorts, same executable shape, same bits."""
+    a = _tiny(rng)
+    b = _tiny(rng, strategy=FedAvgM(momentum=0.0, server_lr=1.0))
+    for _ in range(4):
+        la = a.round()["loss"]
+        lb = b.round()["loss"]
+        assert float(la) == float(lb)
+    assert _leaves_equal(a.params, b.params)
+
+
+def test_fedavgm_zero_momentum_is_fedavg_codec_path(rng):
+    codec = quantize_codec(8, chunk=256)
+    a = _tiny(rng, codec=codec)
+    b = _tiny(rng, codec=codec, strategy=FedAvgM(momentum=0.0))
+    for _ in range(3):
+        a.round(); b.round()
+    assert _leaves_equal(a.params, b.params)
+
+
+def test_fedsgd_strategy_vetoes_non_fedsgd_config(rng):
+    with pytest.raises(ValueError, match="FedSGD strategy requires"):
+        _tiny(rng, strategy=FedSGD())  # default cfg has E=2, B=8
+    eng = _tiny(rng, cfg=fedsgd_config(C=0.5, lr=0.5, seed=0),
+                strategy=FedSGD())
+    assert np.isfinite(float(eng.round()["loss"]))
+
+
+@pytest.mark.parametrize("strategy", [FedAvg(), FedAvgM(momentum=0.9)])
+def test_compile_count_preserved_under_strategies(rng, strategy):
+    """The <=2-executables contract survives the strategy seam, per-round
+    and superstep lanes both."""
+    eng = _tiny(rng, strategy=strategy, device_sampling=True)
+    eng.run(3)                       # per-round lane
+    eng.run(4, rounds_per_step=2)    # superstep lane
+    assert eng.num_compilations <= 2
+
+
+def test_fedavgm_superstep_matches_per_round(rng):
+    """The strategy state rides the scan carry: superstep(R) == R x round()
+    under FedAvgM, params and velocity both."""
+    a = _tiny(rng, strategy=FedAvgM(momentum=0.9), device_sampling=True)
+    b = _tiny(rng, strategy=FedAvgM(momentum=0.9), device_sampling=True)
+    a.run(6, rounds_per_step=3)
+    for _ in range(6):
+        b.round()
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+    for x, y in zip(jax.tree.leaves(a.outer_state),
+                    jax.tree.leaves(b.outer_state)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+
+def test_fedavg_strategy_matches_legacy_inline_aggregation(rng):
+    """Delta-form FedAvg (aggregate deltas, apply identity) == the
+    pre-strategy param-form aggregation to fp32 tolerance: the refactor
+    reassociates `mean(w_k)` as `w + mean(w_k - w)`, nothing else."""
+    from repro.core.engine import RoundBatch, RoundState, build_simulation_round_step
+
+    clients = _clients(rng, [9, 24, 17])
+    model = mnist_2nn(n_classes=5, d_in=16)
+    params = model.init(jax.random.PRNGKey(2))
+    eng = RoundEngine(model.loss, params, clients,
+                      FedAvgConfig(C=1.0, E=2, B=8, lr=0.2, seed=7))
+    ids, valid, key, lr = eng._next_round_inputs()
+    batch, mask, w = eng.materialize_round_batch(ids, key)
+    rb = RoundBatch(batch, mask, w, lr=lr)
+    legacy = build_simulation_round_step(model.loss, interpret=True)
+    viastrat = build_simulation_round_step(model.loss, interpret=True,
+                                           strategy=FedAvg())
+    s_legacy, m_legacy = legacy(RoundState(params), rb)
+    s_strat, m_strat = viastrat(RoundState(params), rb)
+    assert float(m_legacy["loss"]) == float(m_strat["loss"])
+    for a, b in zip(jax.tree.leaves(s_legacy.params),
+                    jax.tree.leaves(s_strat.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# FedAvgM actually helps (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_fedavgm_reaches_target_in_fewer_rounds_than_fedavg(rng):
+    """Pinned seeded 2NN config: server momentum must cross the accuracy
+    target in strictly fewer rounds than plain FedAvg. Small client lr is
+    the regime where the server-side velocity pays (each round's delta is
+    small and consistently oriented early in training)."""
+    from repro.data import make_image_classification, partition_iid
+
+    train, test, _ = make_image_classification(1200, 400, seed=3,
+                                               difficulty=1.5)
+    fed = partition_iid(len(train.x), 20, seed=0)
+    clients = [(train.x[ix].reshape(len(ix), -1), train.y[ix])
+               for ix in fed.client_indices]
+    model = mnist_2nn()
+    params = model.init(jax.random.PRNGKey(0))
+    cfg = FedAvgConfig(C=0.25, E=1, B=20, lr=0.02, seed=0)
+    ev = make_eval_fn(model.apply, test.x.reshape(len(test.x), -1), test.y)
+    target, rounds = 0.80, 30
+
+    def rounds_to(strategy):
+        eng = RoundEngine(model.loss, params, clients, cfg, eval_fn=ev,
+                          strategy=strategy)
+        h = eng.run(rounds, eval_every=1, target_acc=target)
+        return h.rounds_to_target(target)
+
+    r_avg = rounds_to(FedAvg())
+    r_m = rounds_to(FedAvgM(momentum=0.9))
+    assert r_m is not None, "FedAvgM never reached the target"
+    assert r_avg is None or r_m < r_avg, (r_m, r_avg)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing strategy state
+# ---------------------------------------------------------------------------
+
+def test_fedavgm_checkpoint_resume_bit_for_bit(rng, tmp_path):
+    """Mid-run save/restore with FedAvgM: the velocity tree is part of the
+    checkpoint, so the resumed run replays the uninterrupted one exactly."""
+    a = _tiny(rng, strategy=FedAvgM(momentum=0.9))
+    for _ in range(3):
+        a.round()
+    a.save(tmp_path)
+    for _ in range(3):
+        a.round()
+    b = _tiny(rng, strategy=FedAvgM(momentum=0.9))
+    assert b.restore(tmp_path) == 3
+    for _ in range(3):
+        b.round()
+    assert _leaves_equal(a.params, b.params)
+    assert _leaves_equal(a.outer_state, b.outer_state)
+
+
+def test_restore_refuses_strategy_mismatch(rng, tmp_path):
+    """Same pattern as the sampling-mode guard: a FedAvgM checkpoint must
+    not resume into a FedAvg engine (or into different hyper-parameters),
+    and the refusal happens before any engine state mutates."""
+    a = _tiny(rng, strategy=FedAvgM(momentum=0.9))
+    a.round()
+    a.save(tmp_path)
+    for wrong in [None, FedAvgM(momentum=0.5)]:
+        b = _tiny(rng, strategy=wrong)
+        before = jax.tree.leaves(b.params)[0].copy()
+        with pytest.raises(ValueError, match="strateg"):
+            b.restore(tmp_path)
+        assert b.round_idx == 0
+        np.testing.assert_array_equal(np.asarray(before),
+                                      np.asarray(jax.tree.leaves(b.params)[0]))
+
+
+def test_restore_pre_strategy_checkpoint(rng, tmp_path):
+    """Params-only checkpoints from before the strategy seam: an identity
+    strategy resumes them (nothing was lost); a stateful one refuses
+    (there is no velocity to pick up)."""
+    import json as _json
+
+    from repro.checkpoint.io import save_checkpoint
+
+    eng = _tiny(rng)
+    eng.round()
+    save_checkpoint(
+        tmp_path, eng.params, step=1,
+        metadata={
+            "round_idx": 1,
+            "rng_state": _json.dumps(eng.rng.bit_generator.state),
+            "sample_key": [int(v) for v in np.asarray(eng.sample_key)],
+            "device_sampling": False,
+        },
+    )
+    b = _tiny(rng)
+    assert b.restore(tmp_path) == 1
+    assert _leaves_equal(b.params, eng.params)
+    c = _tiny(rng, strategy=FedAvgM(momentum=0.9))
+    with pytest.raises(ValueError, match="predates server strategies"):
+        c.restore(tmp_path)

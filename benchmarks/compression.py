@@ -36,8 +36,10 @@ from repro.core.compression import (
     build_compressed_round_step,
     build_compressed_round_step_loop,
     identity_codec,
+    lowrank_codec,
     mask_codec,
     quantize_codec,
+    topk_codec,
     wire_bytes,
 )
 from repro.core.engine import RoundBatch, RoundState
@@ -120,6 +122,8 @@ def bench_tradeoff(quick: bool) -> None:
         ("q8", quantize_codec(8)),
         ("q4", quantize_codec(4)),
         ("mask0.1", mask_codec(0.1)),
+        ("topk0.05", topk_codec(0.05)),
+        ("lowrank8", lowrank_codec(8)),
     ]
     for name, codec in grid:
         eng = RoundEngine(model.loss, params, clients, cfg, eval_fn=ev,

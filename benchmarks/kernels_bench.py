@@ -28,6 +28,71 @@ def _time(f, *args, n=5):
     return (time.time() - t0) / n * 1e6
 
 
+def wire_path(quick=True):
+    """Wire-path aggregation: fused sparse/packed kernels vs the
+    densify-then-aggregate baseline, with a HARD wall-time gate.
+
+    Gate (acceptance): at keep_frac <= 0.05 the sparse top-k
+    scatter-accumulate path must beat the generic vmap-decode + dense
+    reduce of the SAME payloads in wall time — the sparse path does
+    O(K*k) scatter work where the baseline pays the same scatter (inside
+    decode) plus a dense K*N weighted reduce. A miss raises, failing the
+    suite (benchmarks/run.py exits nonzero).
+    """
+    from repro.core.compression import decode_aggregate, quantize_codec, topk_codec
+
+    r = np.random.default_rng(0)
+    K = 20 if quick else 50
+    N = 100_000 if quick else 400_000
+    flats = jnp.asarray(r.normal(size=(K, N)).astype(np.float32))
+    w = jnp.asarray(r.uniform(0.5, 2.0, K).astype(np.float32))
+    keys = jax.random.split(jax.random.PRNGKey(0), K)
+
+    for keep in (0.05, 0.01):
+        codec = topk_codec(keep)
+        payloads = jax.jit(jax.vmap(codec.encode))(keys, flats)
+        jax.block_until_ready(payloads)
+        sparse = jax.jit(
+            lambda p, ww, c=codec: decode_aggregate(c, p, ww, N,
+                                                    interpret=True)
+        )
+        dense = jax.jit(
+            lambda p, ww, c=codec._replace(aggregate=None):
+                decode_aggregate(c, p, ww, N, interpret=True)
+        )
+        t_sparse = _time(sparse, payloads, w, n=10)
+        t_dense = _time(dense, payloads, w, n=10)
+        speedup = t_dense / max(t_sparse, 1e-9)
+        emit(f"kernels/wire/sparse_agg_top{keep:g}_{K}x{N}", t_sparse,
+             f"densify_baseline_us={t_dense:.1f};speedup={speedup:.2f}x")
+        if t_sparse >= t_dense:
+            raise RuntimeError(
+                f"wire-path gate MISS: sparse top-k aggregation "
+                f"({t_sparse:.1f}us) did not beat densify-then-aggregate "
+                f"({t_dense:.1f}us) at keep_frac={keep} (K={K}, N={N})"
+            )
+
+    for bits in (4, 2):
+        codec = quantize_codec(bits)
+        payloads = jax.jit(jax.vmap(codec.encode))(keys, flats)
+        jax.block_until_ready(payloads)
+        fused = jax.jit(
+            lambda p, ww, c=codec: decode_aggregate(c, p, ww, N,
+                                                    interpret=True)
+        )
+        generic = jax.jit(
+            lambda p, ww, c=codec._replace(aggregate=None):
+                decode_aggregate(c, p, ww, N, interpret=True)
+        )
+        t_fused = _time(fused, payloads, w, n=10)
+        t_generic = _time(generic, payloads, w, n=10)
+        wire_kb = int(np.asarray(payloads["q"][0]).nbytes) / 1024
+        emit(f"kernels/wire/packed_agg_q{bits}_{K}x{N}", t_fused,
+             f"generic_decode_us={t_generic:.1f};"
+             f"speedup={t_generic / max(t_fused, 1e-9):.2f}x;"
+             f"packed_code_kb_per_client={wire_kb:.1f}")
+
+
 def main(quick=True):
     r = np.random.default_rng(0)
     # blocked attention (the ref path the dry-run compiles)

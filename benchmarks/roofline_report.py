@@ -9,6 +9,61 @@ from repro.launch.roofline import load_results, render_table
 from benchmarks.common import emit
 
 
+def wire_path(quick=True):
+    """Simulated-wire-bytes gate: for every deterministic-size codec the
+    PHYSICAL device payload (buffer nbytes, seed leaves charged at
+    SEED_BYTES) must equal the static ``wire_bytes`` price — the honesty
+    guarantee behind every byte number this repo reports. The mask codec
+    is reported but exempt (its dense masked store is a documented
+    simulation convenience). A mismatch raises, failing the suite.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.compression import (
+        identity_codec,
+        lowrank_codec,
+        mask_codec,
+        quantize_codec,
+        realized_device_bytes,
+        topk_codec,
+        wire_bytes,
+    )
+    from repro.models import mnist_2nn
+    from repro.utils.tree import tree_ravel
+
+    model = mnist_2nn() if not quick else mnist_2nn(n_classes=5, d_in=64)
+    params = model.init(jax.random.PRNGKey(0))
+    flat, _ = tree_ravel(params)
+    flat = flat.astype(jnp.float32)
+    dense = wire_bytes(identity_codec(), params)
+    grid = [
+        identity_codec(), quantize_codec(8), quantize_codec(4),
+        quantize_codec(2), topk_codec(0.05), lowrank_codec(8),
+        mask_codec(0.1),
+    ]
+    misses = []
+    for codec in grid:
+        payload = codec.encode(jax.random.PRNGKey(0), flat)
+        realized = realized_device_bytes(payload)
+        wire = wire_bytes(codec, params)
+        exempt = codec.name.startswith("mask")
+        ok = realized == wire
+        emit(f"roofline/wire/{codec.name}", 0.0,
+             f"wire_bytes={wire};realized_bytes={realized};"
+             f"dense_ratio={dense / wire:.1f}x;"
+             f"physical_match={'exempt' if exempt else ok}")
+        if not ok and not exempt:
+            misses.append((codec.name, wire, realized))
+    # packing must actually shrink the wire, monotonically in bit width
+    q8, q4, q2 = (wire_bytes(quantize_codec(b), params) for b in (8, 4, 2))
+    if not (q2 < q4 < q8 < dense):
+        misses.append(("quantize_monotonicity", (q2, q4, q8), dense))
+    if misses:
+        raise RuntimeError(f"wire-bytes gate MISS: {misses}")
+
+
 def main(quick=True, out_dir="results/dryrun"):
     rows = load_results(out_dir)
     if not rows:

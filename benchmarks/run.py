@@ -40,7 +40,9 @@ SUITES = {
     "fig3": fig3_large_E.main,
     "shakespeare": shakespeare_lstm.main,
     "kernels": kernels_bench.main,
+    "kernels_wire": kernels_bench.wire_path,
     "roofline": roofline_report.main,
+    "roofline_wire": roofline_report.wire_path,
     "round_engine": round_engine.main,
     "round_engine_scaling": round_engine.scaling,
     "round_engine_superstep": round_engine.superstep,

@@ -37,6 +37,7 @@ def build_spec(args) -> ExperimentSpec:
         "q4": CodecSpec("quantize", bits=4),
         "mask": CodecSpec("mask", keep_frac=0.1),
         "topk": CodecSpec("topk", keep_frac=0.05),
+        "lowrank": CodecSpec("lowrank", rank=8),
     }[args.codec]
     return ExperimentSpec(
         name=f"mnist_{args.model}_{args.partition}_cli",
@@ -69,7 +70,9 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument(
-        "--codec", choices=["none", "q8", "q4", "mask", "topk"], default="none",
+        "--codec",
+        choices=["none", "q8", "q4", "mask", "topk", "lowrank"],
+        default="none",
         help="client-upload compression (docs/compression.md); traces into "
              "the same single round executable",
     )

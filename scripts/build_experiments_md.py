@@ -45,6 +45,8 @@ def _fmt_codec(spec):
         return f"q{c.bits} (chunk {c.chunk})"
     if c.kind in ("mask", "topk"):
         return f"{c.kind} p={c.keep_frac:g}"
+    if c.kind == "lowrank":
+        return f"lowrank r={c.rank}"
     return c.kind
 
 

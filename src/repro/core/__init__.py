@@ -29,8 +29,10 @@ from repro.core.compression import (
     Codec,
     build_compressed_round_step,
     identity_codec,
+    lowrank_codec,
     mask_codec,
     quantize_codec,
+    realized_device_bytes,
     topk_codec,
     wire_bytes,
 )

@@ -32,18 +32,33 @@ the Pallas ``quantized_aggregate`` kernel, which dequantizes uint8 codes
 and accumulates the weighted mean in fp32 in one pass, so the server never
 materializes the dense (m, N) fp32 deltas.
 
+The payloads are the WIRE, not a simulation stand-in: sub-byte quantize
+codes travel bit-packed in uint32 words (``utils.bitpack``) and byte-wide
+stores are truncated to the true ``n``, so for every codec except ``mask``
+(which keeps a dense masked vector as a simulation convenience, documented
+there) the device-resident payload is byte-for-byte what ``wire_bytes``
+claims — ``realized_device_bytes`` measures it, tests pin the equality.
+
 Codecs:
 - ``identity_codec()``       fp32 passthrough (the equivalence baseline).
 - ``quantize_codec(bits)``   stochastic uniform quantization, per-``chunk``
-                             fp32 (lo, scale): 4-8x fewer bytes, unbiased.
+                             fp32 (lo, scale): 4-16x fewer bytes, unbiased;
+                             bits < 8 ships bit-packed uint32 words.
 - ``mask_codec(keep_frac)``  random-mask subsampling with 1/p rescaling;
                              the mask regenerates from a shared seed, so
                              only kept values + 1 seed upload. Unbiased.
 - ``topk_codec(keep_frac)``  magnitude top-k with int32 indices (biased but
-                             norm-preserving; flagged ``unbiased=False``).
+                             norm-preserving; flagged ``unbiased=False``);
+                             aggregates through the sparse scatter kernel.
+- ``lowrank_codec(rank)``    the low-rank structured update of Konečný et
+                             al. (arxiv 1610.02527): ship B = A^T M for a
+                             seed-regrown Gaussian A; unbiased sketch whose
+                             decode is a small matmul fused into
+                             aggregation.
 """
 from __future__ import annotations
 
+import math
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -53,15 +68,21 @@ import numpy as np
 from repro.kernels.fedavg_agg import fedavg_aggregate
 from repro.kernels.ops import (
     default_interpret,
+    packed_quantized_fedavg_aggregate,
     quantized_fedavg_aggregate,
+    sharded_packed_quantized_fedavg_aggregate,
     sharded_quantized_fedavg_aggregate,
+    sharded_sparse_fedavg_aggregate,
+    sparse_fedavg_aggregate,
 )
+from repro.utils.bitpack import pack_codes, packed_size, unpack_codes, words_per_chunk
 from repro.utils.tree import tree_ravel, tree_ravel_stacked, tree_size, tree_unravel
 
 # Charged once per upload by codecs whose SERVER-side decode must regrow
 # client randomness from a shared seed (the mask codec: kept values + seed
-# travel, indices are reconstructed). Codecs whose randomness stays
-# client-local (quantize's stochastic rounding) have nothing to ship.
+# travel, indices are reconstructed; the low-rank codec: B + the seed that
+# regrows A). Codecs whose randomness stays client-local (quantize's
+# stochastic rounding) have nothing to ship.
 SEED_BYTES = 8
 
 
@@ -120,13 +141,23 @@ def quantize_codec(bits: int = 8, chunk: int = 512) -> Codec:
     Stochastic rounding keeps E[decode(encode(x))] = x per coordinate;
     constant chunks (hi == lo, scale 0) decode EXACTLY to lo.
 
-    Aggregation fuses into the Pallas ``quantized_aggregate`` kernel: the
-    server reads the uint codes directly and never expands per-client fp32.
+    The payload IS the wire: sub-byte widths (bits < 8) ship bit-packed
+    uint32 words (``utils.bitpack`` chunk framing — codes never straddle a
+    word, widths that do not divide 32 pay their slack bits honestly), and
+    byte-wide stores are truncated to the true ``n`` codes. Either way the
+    device-resident byte count equals ``wire_bytes(n)``.
+
+    Aggregation fuses into the Pallas ``quantized_aggregate`` kernel (or
+    its ``packed_quantized_aggregate`` twin, which unpacks sub-byte words
+    inside the kernel body): the server reads the wire codes directly and
+    never expands per-client fp32.
     """
     if bits < 1 or bits > 16:
         raise ValueError(f"quantize_codec supports 1..16 bits, got {bits}")
     levels = 2**bits - 1
+    packed = bits < 8
     store_dtype = jnp.uint8 if bits <= 8 else jnp.uint16
+    wpc = words_per_chunk(chunk, bits) if packed else None
 
     def encode(key, flat):
         n = flat.shape[0]
@@ -142,46 +173,84 @@ def quantize_codec(bits: int = 8, chunk: int = 512) -> Codec:
         safe = jnp.maximum(scale, 1e-12)
         x = (v - lo[:, None]) / safe[:, None] * levels
         # floor(x + U[0,1)) realizes stochastic rounding: E[q] = x.
-        q = jnp.floor(x + jax.random.uniform(key, v.shape))
+        q = jnp.clip(jnp.floor(x + jax.random.uniform(key, v.shape)),
+                     0, levels)
+        if packed:
+            # The exact wire words: full chunks at wpc words each, the tail
+            # chunk truncated to its own ceil(tail/ppw) words (decode and
+            # the kernel re-pad to the chunk-aligned frame).
+            wire = pack_codes(q.astype(jnp.uint32), bits, chunk)
+            wire = wire[: packed_size(n, chunk, bits)]
+        else:
+            # Truncate the chunk-padded store to the true n codes; pad
+            # codes are repeats of the tail value and carry no information.
+            wire = q.astype(store_dtype).reshape(-1)[:n]
         return {
-            "q": jnp.clip(q, 0, levels).astype(store_dtype),
+            "q": wire,
             "lo": lo,
             "scale": scale,
-            # true (unpadded) size, so payload_bytes charges the bit-packed
-            # wire — not the chunk-padded store — matching wire_bytes(n)
+            # true (unpadded) size — sim-side metadata, not wire payload
             "n": jnp.int32(n),
         }
 
     def decode(payload, n):
-        q = payload["q"].astype(jnp.float32)
+        n_chunks = -(-n // chunk)
+        if packed:
+            words = jnp.pad(
+                payload["q"], (0, n_chunks * wpc - payload["q"].shape[0])
+            )
+            q = unpack_codes(words, bits, chunk, n_chunks).astype(jnp.float32)
+        else:
+            q = jnp.pad(payload["q"], (0, n_chunks * chunk - n))
+            q = q.reshape(n_chunks, chunk).astype(jnp.float32)
         x = q * (payload["scale"] / levels)[:, None] + payload["lo"][:, None]
         return x.reshape(-1)[:n]
 
     def aggregate(payloads, weights, n, *, interpret, accum_dtype,
                   axis_name=None):
-        q = payloads["q"]                         # (m, C, chunk)
-        if axis_name is not None:
-            # Cohort-sharded: local partial sum over this shard's clients
-            # with raw weights, psum-finished across the client axis.
-            out = sharded_quantized_fedavg_aggregate(
-                q.reshape(q.shape[0], -1), payloads["lo"], payloads["scale"],
-                weights, chunk=chunk, levels=levels, axis_name=axis_name,
-                interpret=interpret, accum_dtype=accum_dtype,
-            )
+        q = payloads["q"]                     # (m, wire) exact wire arrays
+        n_chunks = -(-n // chunk)
+        kw = dict(chunk=chunk, levels=levels, interpret=interpret,
+                  accum_dtype=accum_dtype)
+        if packed:
+            # Re-pad the truncated tail frame with zero words (code 0; the
+            # output is sliced to n below, so tail pad codes are inert).
+            words = jnp.pad(q, ((0, 0), (0, n_chunks * wpc - q.shape[1])))
+            if axis_name is not None:
+                # Cohort-sharded: local partial sum over this shard's
+                # clients with raw weights, psum-finished across the axis.
+                out = sharded_packed_quantized_fedavg_aggregate(
+                    words, payloads["lo"], payloads["scale"], weights,
+                    bits=bits, axis_name=axis_name, **kw,
+                )
+            else:
+                out = packed_quantized_fedavg_aggregate(
+                    words, payloads["lo"], payloads["scale"], weights,
+                    bits=bits, **kw,
+                )
             return out[:n]
-        out = quantized_fedavg_aggregate(
-            q.reshape(q.shape[0], -1), payloads["lo"], payloads["scale"],
-            weights, chunk=chunk, levels=levels, interpret=interpret,
-            accum_dtype=accum_dtype,
-        )
+        codes = jnp.pad(q, ((0, 0), (0, n_chunks * chunk - q.shape[1])))
+        if axis_name is not None:
+            out = sharded_quantized_fedavg_aggregate(
+                codes, payloads["lo"], payloads["scale"], weights,
+                axis_name=axis_name, **kw,
+            )
+        else:
+            out = quantized_fedavg_aggregate(
+                codes, payloads["lo"], payloads["scale"], weights, **kw,
+            )
         return out[:n]
 
     def wire_bytes(n: int) -> int:
-        # The wire packs codes at their true bit width (nibbles for 4-bit)
-        # plus 8 bytes of (lo, scale) per chunk; the in-simulation payload
-        # stores whole uint8/uint16 lanes. The stochastic-rounding key is
-        # client-local — decode needs only codes + ranges, so no seed ships.
+        # Codes at their true (word-framed) width plus 8 bytes of
+        # (lo, scale) per chunk. The stochastic-rounding key is
+        # client-local — decode needs only codes + ranges, so no seed
+        # ships. This is now also the PHYSICAL payload size (see encode).
         n_chunks = -(-n // chunk)
+        if packed:
+            return 4 * packed_size(n, chunk, bits) + 8 * n_chunks
+        # bits == 8/16 match the physical store exactly; the odd 9..15
+        # widths still price the ideal packing (stores stay uint16).
         return -(-n * bits // 8) + 8 * n_chunks
 
     def payload_bytes(payload) -> int:
@@ -235,7 +304,12 @@ def mask_codec(keep_frac: float = 0.1) -> Codec:
 
 def topk_codec(keep_frac: float = 0.05) -> Codec:
     """Magnitude top-k (+int32 indices on the wire). Biased — the standard
-    norm-preserving heuristic; k = max(floor(p * n), 1) is static."""
+    norm-preserving heuristic; k = max(floor(p * n), 1) is static.
+
+    Aggregation fuses into the Pallas ``sparse_aggregate`` scatter kernel:
+    the server scatter-accumulates the (idx, values) pairs straight into
+    the fp32 accumulator — the dense (m, N) per-client deltas of the
+    generic vmap-decode path are never materialized."""
     if not 0.0 < keep_frac <= 1.0:
         raise ValueError(f"keep_frac must be in (0, 1], got {keep_frac}")
 
@@ -254,6 +328,19 @@ def topk_codec(keep_frac: float = 0.05) -> Codec:
         out = jnp.zeros((n,), jnp.float32)
         return out.at[payload["idx"]].set(payload["values"])
 
+    def aggregate(payloads, weights, n, *, interpret, accum_dtype,
+                  axis_name=None):
+        if axis_name is not None:
+            return sharded_sparse_fedavg_aggregate(
+                payloads["idx"], payloads["values"], weights, n,
+                axis_name=axis_name, interpret=interpret,
+                accum_dtype=accum_dtype,
+            )
+        return sparse_fedavg_aggregate(
+            payloads["idx"], payloads["values"], weights, n,
+            interpret=interpret, accum_dtype=accum_dtype,
+        )
+
     return Codec(
         name=f"top{keep_frac:g}",
         encode=encode,
@@ -261,6 +348,89 @@ def topk_codec(keep_frac: float = 0.05) -> Codec:
         wire_bytes=lambda n: 8 * k_of(n),
         payload_bytes=lambda p: 8 * int(np.asarray(p["idx"]).size),
         unbiased=False,
+        aggregate=aggregate,
+    )
+
+
+def lowrank_codec(rank: int = 8) -> Codec:
+    """Low-rank structured update (Konečný et al., arxiv 1610.02527).
+
+    The raveled delta is viewed as an (d1, d2) matrix M (d1 = ceil(sqrt(n)),
+    zero-padded), each client draws a Gaussian sketch A ~ N(0,1) of shape
+    (d1, rank) from its codec key, and the wire carries B = A^T M —
+    ``4 * rank * d2`` bytes plus the seed that regrows A server-side
+    (compression when rank << d1). Decode is Â = A B / rank: since
+    E[A A^T] = rank * I, the estimate is unbiased, the random-projection
+    analogue of the paper's low-rank updates (those optimize B given a
+    fixed A; the sketch form keeps encode a single matmul and stays
+    unbiased).
+
+    Aggregation never materializes per-client dense deltas: the weighted
+    mean  Σ_k w_k A_k B_k / rank  is ONE batched ``dot_general``
+    contracting the (client, rank) axes — a small matmul fused into the
+    server reduce, with the same psum-finished partial-sum mode as the
+    Pallas kernels for the cohort-sharded lane."""
+    if rank < 1:
+        raise ValueError(f"rank must be >= 1, got {rank}")
+
+    def dims(n: int):
+        d1 = math.isqrt(n)
+        if d1 * d1 < n:
+            d1 += 1
+        d2 = -(-n // max(d1, 1))
+        return max(d1, 1), d2
+
+    def regrow(key, d1):
+        return jax.random.normal(key, (d1, rank), jnp.float32)
+
+    def encode(key, flat):
+        n = flat.shape[0]
+        d1, d2 = dims(n)
+        m = jnp.pad(flat.astype(jnp.float32), (0, d1 * d2 - n))
+        a = regrow(key, d1)
+        return {
+            "b": jnp.dot(a.T, m.reshape(d1, d2),
+                         preferred_element_type=jnp.float32),
+            "key": key,
+        }
+
+    def decode(payload, n):
+        d1, d2 = dims(n)
+        a = regrow(payload["key"], d1)
+        m = jnp.dot(a, payload["b"], preferred_element_type=jnp.float32)
+        return m.reshape(-1)[:n] / rank
+
+    def aggregate(payloads, weights, n, *, interpret, accum_dtype,
+                  axis_name=None):
+        d1, d2 = dims(n)
+        a = jax.vmap(lambda k: regrow(k, d1))(payloads["key"])  # (m, d1, r)
+        b = payloads["b"]                                       # (m, r, d2)
+        w = jnp.asarray(weights, jnp.float32)
+        if axis_name is None:
+            w = w / jnp.sum(w)
+        # Σ_k w_k A_k B_k in one contraction over (client, rank).
+        m = jax.lax.dot_general(
+            a * w[:, None, None], b, (((0, 2), (0, 1)), ((), ())),
+            preferred_element_type=jnp.dtype(accum_dtype),
+        )
+        out = m.reshape(-1)[:n] / rank
+        if axis_name is not None:
+            num = jax.lax.psum(out, axis_name)
+            den = jax.lax.psum(jnp.sum(w), axis_name)
+            return num / den
+        return out
+
+    def wire_bytes(n: int) -> int:
+        return 4 * rank * dims(n)[1] + SEED_BYTES
+
+    return Codec(
+        name=f"lowrank{rank}",
+        encode=encode,
+        decode=decode,
+        wire_bytes=wire_bytes,
+        payload_bytes=lambda p: 4 * int(np.asarray(p["b"]).size) + SEED_BYTES,
+        unbiased=True,
+        aggregate=aggregate,
     )
 
 
@@ -446,3 +616,24 @@ def wire_bytes(codec: Codec, params) -> int:
 def upload_bytes_per_round(codec: Codec, params) -> int:
     """Back-compat alias of :func:`wire_bytes` (pre-PR-2 name)."""
     return wire_bytes(codec, params)
+
+
+def realized_device_bytes(payload) -> int:
+    """PHYSICAL nbytes of one payload's wire arrays, measured on the
+    device buffers themselves — the ground truth that :func:`wire_bytes`
+    claims to predict (tests and the roofline gate pin the equality for
+    every codec except ``mask``, whose dense masked store is a documented
+    simulation convenience).
+
+    Sim-side metadata leaves are excluded: ``n`` (static true size) and
+    ``kept`` (realized mask count) never travel; a ``key`` leaf stands for
+    the shipped seed and is charged at ``SEED_BYTES``."""
+    total = 0
+    for name, leaf in payload.items():
+        if name in ("n", "kept"):
+            continue
+        if name == "key":
+            total += SEED_BYTES
+            continue
+        total += int(np.asarray(leaf).nbytes)
+    return total

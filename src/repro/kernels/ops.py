@@ -15,7 +15,11 @@ import jax.numpy as jnp
 from repro.kernels.ce_loss import fused_cross_entropy
 from repro.kernels.fedavg_agg import fedavg_aggregate
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.quantized_agg import quantized_aggregate
+from repro.kernels.quantized_agg import (
+    packed_quantized_aggregate,
+    quantized_aggregate,
+)
+from repro.kernels.sparse_agg import sparse_aggregate
 from repro.kernels.ssm_scan import ssm_scan
 from repro.utils.tree import tree_ravel_stacked, tree_unravel
 
@@ -137,6 +141,78 @@ def sharded_quantized_fedavg_aggregate(codes, lo, scale, weights, *, chunk,
         codes, lo, scale, w, chunk=chunk, levels=levels,
         block_chunks=block_chunks, interpret=interpret,
         accum_dtype=accum_dtype,
+    )
+    num = jax.lax.psum(partial, axis_name)
+    den = jax.lax.psum(jnp.sum(w), axis_name)
+    return num / den
+
+
+def packed_quantized_fedavg_aggregate(words, lo, scale, weights, *, bits,
+                                      chunk, levels, interpret=False,
+                                      accum_dtype=jnp.float32,
+                                      block_chunks=None):
+    """Sub-byte twin of :func:`quantized_fedavg_aggregate`: the payload is
+    the bit-packed uint32 wire words themselves (``utils.bitpack`` chunk
+    framing) and the Pallas kernel unpacks + dequantizes + accumulates in
+    one fused body. RAW counts normalized here, same contract."""
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+    return packed_quantized_aggregate(
+        words, lo, scale, w, bits=bits, chunk=chunk, levels=levels,
+        block_chunks=block_chunks, interpret=interpret,
+        accum_dtype=accum_dtype,
+    )
+
+
+def sharded_packed_quantized_fedavg_aggregate(words, lo, scale, weights, *,
+                                              bits, chunk, levels, axis_name,
+                                              interpret=False,
+                                              accum_dtype=jnp.float32,
+                                              block_chunks=None):
+    """Partial-sum mode of :func:`packed_quantized_fedavg_aggregate` —
+    identical psum-finished pattern to
+    :func:`sharded_quantized_fedavg_aggregate`."""
+    w = jnp.asarray(weights, jnp.float32)
+    partial = packed_quantized_aggregate(
+        words, lo, scale, w, bits=bits, chunk=chunk, levels=levels,
+        block_chunks=block_chunks, interpret=interpret,
+        accum_dtype=accum_dtype,
+    )
+    num = jax.lax.psum(partial, axis_name)
+    den = jax.lax.psum(jnp.sum(w), axis_name)
+    return num / den
+
+
+def sparse_fedavg_aggregate(idx, values, weights, n, *, interpret=False,
+                            accum_dtype=jnp.float32, block_clients=None):
+    """Weighted-average K sparse top-k client payloads into a dense (n,)
+    delta through the Pallas ``sparse_aggregate`` scatter kernel — the
+    server never materializes dense per-client deltas.
+
+    ``weights`` are RAW example counts n_k, normalized here (the kernel
+    asserts the normalized contract, mirroring ``tree_fedavg_aggregate``).
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+    return sparse_aggregate(
+        idx, values, w, n, block_clients=block_clients,
+        interpret=interpret, accum_dtype=accum_dtype,
+    )
+
+
+def sharded_sparse_fedavg_aggregate(idx, values, weights, n, *, axis_name,
+                                    interpret=False,
+                                    accum_dtype=jnp.float32,
+                                    block_clients=None):
+    """Partial-sum mode of :func:`sparse_fedavg_aggregate` for cohort
+    sharding: each shard scatter-accumulates its local (m/D, k) payload
+    slice with UNnormalized weights, then one ``psum`` finishes the
+    weighted sum and the weight total before the single division. Ghost
+    (cohort-padding) clients carry weight 0 and vanish from both sums."""
+    w = jnp.asarray(weights, jnp.float32)
+    partial = sparse_aggregate(
+        idx, values, w, n, block_clients=block_clients,
+        interpret=interpret, accum_dtype=accum_dtype,
     )
     num = jax.lax.psum(partial, axis_name)
     den = jax.lax.psum(jnp.sum(w), axis_name)

@@ -160,3 +160,138 @@ def dequantize_ref(codes, lo, scale, *, chunk, levels):
     q = codes.astype(jnp.float32).reshape(K, C, chunk)
     x = q * (scale / levels)[:, :, None] + lo[:, :, None]
     return x.reshape(K, n_pad)
+
+
+# ---------------------------------------------------------------------------
+# packed sub-byte variant: the wire words ARE the kernel input
+# ---------------------------------------------------------------------------
+
+def _packed_qagg_kernel(w_ref, words_ref, lo_ref, scale_ref, o_ref, *,
+                        bits, chunk, levels, accum_dtype):
+    # words_ref: (K, bc*wpc) uint32; lo/scale_ref: (K, bc); w_ref: (K, 1).
+    words = words_ref[...]
+    K = words.shape[0]
+    ppw = 32 // bits
+    wpc = -(-chunk // ppw)
+    bc = words.shape[1] // wpc
+    # In-register unpack (bitpack.unpack_codes, phrased per tile): ppw
+    # static shift+mask lanes, then drop the per-chunk slack columns.
+    mask = jnp.uint32(2**bits - 1)
+    w3 = words.reshape(K, bc, wpc)
+    cols = [(w3 >> jnp.uint32(j * bits)) & mask for j in range(ppw)]
+    q = jnp.stack(cols, axis=-1).reshape(K, bc, wpc * ppw)[:, :, :chunk]
+    step = (scale_ref[...] / levels).astype(accum_dtype)       # (K, bc)
+    lo = lo_ref[...].astype(accum_dtype)                       # (K, bc)
+    deq = q.astype(accum_dtype) * step[:, :, None] + lo[:, :, None]
+    w = w_ref[...].astype(accum_dtype)                         # (K, 1)
+    acc = jax.lax.dot_general(
+        w[:, 0], deq.reshape(K, bc * chunk), (((0,), (0,)), ((), ())),
+        preferred_element_type=accum_dtype,
+    )
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "chunk", "levels", "block_chunks", "interpret",
+                     "accum_dtype"),
+)
+def _packed_qagg_impl(words, lo, scale, weights, *, bits, chunk, levels,
+                      block_chunks, interpret, accum_dtype):
+    ppw = 32 // bits
+    wpc = -(-chunk // ppw)
+    K, n_words = words.shape
+    C = n_words // wpc
+    bc = min(block_chunks, C)
+    pad_c = (-C) % bc
+    if pad_c:
+        # Zero words decode to code 0; zero lo/scale dequantize that to
+        # exactly 0, so padded chunks contribute nothing.
+        words = jnp.pad(words, ((0, 0), (0, pad_c * wpc)))
+        lo = jnp.pad(lo, ((0, 0), (0, pad_c)))
+        scale = jnp.pad(scale, ((0, 0), (0, pad_c)))
+    nb = (C + pad_c) // bc
+    w2 = weights.reshape(K, 1).astype(jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_packed_qagg_kernel, bits=bits, chunk=chunk,
+                          levels=levels, accum_dtype=accum_dtype),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((K, bc * wpc), lambda i: (0, i)),
+            pl.BlockSpec((K, bc), lambda i: (0, i)),
+            pl.BlockSpec((K, bc), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((bc * chunk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb * bc * chunk,),
+                                       jnp.dtype(accum_dtype)),
+        interpret=interpret,
+    )(w2, words, lo, scale)
+    return out[: C * chunk]
+
+
+def packed_quantized_aggregate(
+    words: jnp.ndarray,    # (K, C*wpc) uint32 bit-packed codes (chunk frames)
+    lo: jnp.ndarray,       # (K, C) per-chunk offsets
+    scale: jnp.ndarray,    # (K, C) per-chunk ranges
+    weights: jnp.ndarray,  # (K,) normalized (sum to 1)
+    *,
+    bits: int,
+    chunk: int,
+    levels: int,
+    block_chunks=None,
+    interpret: bool = False,
+    accum_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Fused unpack + dequantize + weighted mean -> (C*chunk,).
+
+    The sub-byte twin of :func:`quantized_aggregate`: the input is the
+    bit-packed uint32 wire form itself (``utils.bitpack`` chunk framing,
+    ``wpc = ceil(chunk / (32 // bits))`` words per chunk), unpacked in the
+    kernel body — dense codes never exist outside VMEM registers. Weights
+    follow the same pre-normalized contract; block policy mirrors
+    ``quantized_aggregate`` (one grid step under the interpreter).
+    """
+    if not 1 <= bits <= 7:
+        raise ValueError(f"packed aggregation is for bits in 1..7, got {bits}")
+    wpc = -(-chunk // (32 // bits))
+    if words.ndim != 2 or words.shape[1] % wpc:
+        raise ValueError(
+            f"words must be (K, C*{wpc}) for chunk={chunk}, bits={bits}; "
+            f"got {words.shape}"
+        )
+    want = (words.shape[0], words.shape[1] // wpc)
+    if lo.shape != want or scale.shape != want:
+        raise ValueError(
+            f"lo/scale must be (K, C)={want}; got lo {lo.shape}, "
+            f"scale {scale.shape}"
+        )
+    if not isinstance(weights, jax.core.Tracer):
+        s = float(jnp.sum(jnp.asarray(weights, jnp.float32)))
+        if abs(s - 1.0) > 1e-3:
+            raise ValueError(
+                "packed_quantized_aggregate requires pre-normalized weights "
+                f"(sum==1); got sum={s:.6f}. Normalize raw counts in "
+                "core.compression.decode_aggregate, nowhere else."
+            )
+    if block_chunks is None:
+        C = words.shape[1] // wpc
+        block_chunks = (
+            min(C, max(1, (1 << 20) // chunk)) if interpret else 32
+        )
+    return _packed_qagg_impl(
+        words, lo, scale, weights,
+        bits=bits, chunk=chunk, levels=levels, block_chunks=block_chunks,
+        interpret=interpret, accum_dtype=jnp.dtype(accum_dtype),
+    )
+
+
+def unpack_ref(words, *, bits, chunk):
+    """Pure-jnp oracle: (K, C*wpc) packed words -> (K, C*chunk) uint32 codes
+    (``utils.bitpack.unpack_codes`` vmapped over the client axis)."""
+    from repro.utils.bitpack import unpack_codes, words_per_chunk
+
+    C = words.shape[1] // words_per_chunk(chunk, bits)
+    return jax.vmap(
+        lambda w: unpack_codes(w, bits, chunk, C).reshape(-1)
+    )(words)

@@ -1,0 +1,140 @@
+"""Pallas kernel scatter-accumulating sparse top-k payloads — FedAvg
+aggregation that never densifies the clients.
+
+Under the top-k codec each client uploads k (index, value) pairs. The
+generic server path scatters every client back to a dense (K, N) fp32
+matrix and then reduces it away — K*N memory traffic and FLOPs to combine
+K*k meaningful numbers. This kernel aggregates the sparse payloads
+directly: the grid walks client blocks, each step scatter-adds its block's
+weighted values into the SAME (N,) accumulator block (a revisited output
+block — constant index_map, zeroed at the first grid step, live in VMEM
+across the sequential grid), so server-side work is O(K*k) + one dense
+output, not O(K*N).
+
+Layout contract (produced by ``topk_codec``'s encode):
+
+  idx:    (K, k) int32 in [0, N) — a client's kept coordinates. Duplicate
+          indices WITHIN a client accumulate (top-k never emits
+          duplicates, but the kernel and :func:`densify_ref` agree on the
+          additive semantics anyway).
+  vals:   (K, k) fp32/bf16 — the kept values.
+  weights:(K,) fp32, **pre-normalized to sum to 1** — the
+          ``fedavg_aggregate`` contract: normalization happens in exactly
+          one sanctioned place (``core.compression.decode_aggregate``).
+          Asserted eagerly on concrete weights. Exception, same as the
+          dense kernel: cohort-sharded partial sums
+          (``ops.sharded_sparse_fedavg_aggregate``) pass raw weights and
+          psum-finish before a single division.
+
+``interpret=True`` is the CPU test/CI fallback. The emulated grid is an
+XLA while loop with heavy per-step overhead, so the interpret block policy
+is ONE grid step (all clients in one block); on hardware the default walks
+8 clients per step to bound the VMEM tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sparse_kernel(w_ref, idx_ref, val_ref, o_ref, *, accum_dtype):
+    # idx/val_ref: (Kb, k); w_ref: (Kb, 1); o_ref: the FULL (N,) accumulator,
+    # revisited every grid step.
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = w_ref[...].astype(accum_dtype)                         # (Kb, 1)
+    contrib = (val_ref[...].astype(accum_dtype) * w).reshape(-1)
+    idx = idx_ref[...].reshape(-1)
+    # One vectorized scatter-add per grid step (Kb*k updates), not a loop
+    # over elements — under the interpreter this lowers to a single XLA
+    # scatter, which is what makes the sparse path beat densify-then-reduce.
+    o_ref[...] = o_ref[...].at[idx].add(contrib)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "block_clients", "interpret", "accum_dtype"),
+)
+def _sparse_impl(idx, vals, weights, *, n, block_clients, interpret,
+                 accum_dtype):
+    K, k = idx.shape
+    kb = min(block_clients, K)
+    pad = (-K) % kb
+    if pad:
+        # Ghost clients: weight 0 and index 0 — they add 0.0 to slot 0.
+        idx = jnp.pad(idx, ((0, pad), (0, 0)))
+        vals = jnp.pad(vals, ((0, pad), (0, 0)))
+        weights = jnp.pad(weights, (0, pad))
+    nb = (K + pad) // kb
+    w2 = weights.reshape(-1, 1).astype(jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_sparse_kernel, accum_dtype=accum_dtype),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((kb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((kb, k), lambda i: (i, 0)),
+            pl.BlockSpec((kb, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.dtype(accum_dtype)),
+        interpret=interpret,
+    )(w2, idx, vals)
+
+
+def sparse_aggregate(
+    idx: jnp.ndarray,      # (K, k) int32 coordinates in [0, n)
+    vals: jnp.ndarray,     # (K, k) values at those coordinates
+    weights: jnp.ndarray,  # (K,) normalized (sum to 1)
+    n: int,                # static dense length
+    *,
+    block_clients=None,
+    interpret: bool = False,
+    accum_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Weighted mean of K sparse client deltas -> dense (n,).
+
+    Matches ``fedavg_aggregate(densify_ref(idx, vals, n), weights)`` to
+    accumulation tolerance without materializing the (K, n) dense deltas.
+    """
+    if idx.ndim != 2 or idx.shape != vals.shape:
+        raise ValueError(
+            f"idx and vals must share a (K, k) shape; got idx {idx.shape}, "
+            f"vals {vals.shape}"
+        )
+    if weights.shape != (idx.shape[0],):
+        raise ValueError(
+            f"weights must be ({idx.shape[0]},), got {weights.shape}"
+        )
+    if n < 1:
+        raise ValueError(f"n must be >= 1, got {n}")
+    if not isinstance(weights, jax.core.Tracer):
+        s = float(jnp.sum(jnp.asarray(weights, jnp.float32)))
+        if abs(s - 1.0) > 1e-3:
+            raise ValueError(
+                "sparse_aggregate requires pre-normalized weights (sum==1); "
+                f"got sum={s:.6f}. Normalize raw counts in "
+                "core.compression.decode_aggregate, nowhere else."
+            )
+    if block_clients is None:
+        block_clients = idx.shape[0] if interpret else 8
+    return _sparse_impl(
+        idx.astype(jnp.int32), vals, weights,
+        n=n, block_clients=block_clients, interpret=interpret,
+        accum_dtype=jnp.dtype(accum_dtype),
+    )
+
+
+def densify_ref(idx, vals, n: int):
+    """Pure-jnp oracle: (K, k) sparse payloads -> dense (K, n) fp32.
+
+    Additive on duplicate indices, matching the kernel (top-k indices are
+    unique per client, where add == set)."""
+    def one(i, v):
+        return jnp.zeros((n,), jnp.float32).at[i].add(v.astype(jnp.float32))
+
+    return jax.vmap(one)(idx, vals)

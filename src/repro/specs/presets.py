@@ -77,6 +77,18 @@ PAPER_SPECS: Dict[str, ExperimentSpec] = {
             "mnist_2nn_noniid_q8", "mnist_2nn", "pathological_noniid",
             codec=CodecSpec("quantize", bits=8),
         ),
+        # Sparse top-k uploads through the scatter-accumulate kernel
+        # (keep_frac 0.05 ~ 160x fewer upload bytes than dense fp32).
+        _mnist(
+            "mnist_2nn_noniid_topk", "mnist_2nn", "pathological_noniid",
+            codec=CodecSpec("topk", keep_frac=0.05),
+        ),
+        # Low-rank structured updates (Konečný et al. 1610.02527): the
+        # sketch rank trades bytes against estimator variance.
+        _mnist(
+            "mnist_2nn_noniid_lowrank", "mnist_2nn", "pathological_noniid",
+            codec=CodecSpec("lowrank", rank=8),
+        ),
         _mnist(
             "mnist_2nn_noniid_fedavgm", "mnist_2nn", "pathological_noniid",
             strategy=FedAvgM(momentum=0.9),

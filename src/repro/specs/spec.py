@@ -117,13 +117,15 @@ class PartitionSpec:
 class CodecSpec:
     """Client-upload compression (docs/compression.md): ``identity`` |
     ``quantize`` (``bits``, ``chunk``) | ``mask`` / ``topk``
-    (``keep_frac``). ``None`` at the ExperimentSpec level means dense fp32
-    uploads (no codec path at all)."""
+    (``keep_frac``) | ``lowrank`` (``rank``). ``None`` at the
+    ExperimentSpec level means dense fp32 uploads (no codec path at
+    all)."""
 
     kind: str
     bits: int = 8
     chunk: int = 512
     keep_frac: float = 0.1
+    rank: int = 8
 
     def build(self):
         from repro.core import compression as C
@@ -136,6 +138,8 @@ class CodecSpec:
             return C.mask_codec(self.keep_frac)
         if self.kind == "topk":
             return C.topk_codec(self.keep_frac)
+        if self.kind == "lowrank":
+            return C.lowrank_codec(self.rank)
         raise ValueError(f"unknown codec kind {self.kind!r}")
 
 

@@ -1,0 +1,109 @@
+"""Sub-byte code packing: chunk-framed uint32 words for the quantize wire.
+
+``quantize_codec(bits < 8)`` prices its wire at the true bit width, and
+this module is what makes the device payload physically match that price:
+integer codes in ``[0, 2**bits)`` pack little-endian into uint32 words, so
+the array that travels (and that the fused Pallas kernel reads) is the
+bit-packed wire form itself, not a byte-per-code simulation stand-in.
+
+Framing is PER CHUNK, mirroring the codec's (lo, scale) chunking: each
+``chunk``-code row packs independently into ``words_per_chunk`` words, and
+codes never straddle a word boundary — ``codes_per_word = 32 // bits``
+codes per word, with ``32 % bits`` bits of slack wasted per word for
+widths that do not divide 32 (3, 5, 6, 7). Word-aligned chunk frames keep
+the kernel's per-chunk (lo, scale) tiles and its unpack loop statically
+shaped; the slack is charged honestly by ``packed_size`` and therefore by
+``wire_bytes``.
+
+A tail chunk shorter than ``chunk`` only ships its own
+``ceil(tail / codes_per_word)`` words: ``pack_codes`` emits the full
+chunk-aligned word array, and callers truncate to ``packed_size(n)`` for
+the wire (``unpack_codes`` re-pads — zero words decode to code 0, and the
+codec slices back to the true ``n`` anyway).
+
+All functions are jit/vmap-safe for static ``bits``/``chunk``/``n``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+__all__ = [
+    "codes_per_word",
+    "words_per_chunk",
+    "packed_size",
+    "pack_codes",
+    "unpack_codes",
+]
+
+
+def codes_per_word(bits: int) -> int:
+    """How many ``bits``-wide codes one uint32 word carries (floor)."""
+    if not 1 <= bits < 32:
+        raise ValueError(f"bits must be in [1, 32), got {bits}")
+    return 32 // bits
+
+
+def words_per_chunk(chunk: int, bits: int) -> int:
+    """uint32 words per full ``chunk``-code frame."""
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    return -(-chunk // codes_per_word(bits))
+
+
+def packed_size(n: int, chunk: int, bits: int) -> int:
+    """uint32 words on the wire for ``n`` true codes under chunk framing.
+
+    Full chunks cost ``words_per_chunk`` each; the tail chunk costs only
+    ``ceil(tail / codes_per_word)`` — the wire never pays for pad codes.
+    """
+    if n < 1:
+        raise ValueError(f"n must be >= 1, got {n}")
+    ppw = codes_per_word(bits)
+    n_chunks = -(-n // chunk)
+    tail = n - (n_chunks - 1) * chunk
+    return (n_chunks - 1) * words_per_chunk(chunk, bits) + (-(-tail // ppw))
+
+
+def pack_codes(codes, bits: int, chunk: int):
+    """(C, chunk) integer codes (< 2**bits) -> (C * words_per_chunk,) uint32.
+
+    Little-endian within a word: code ``j`` of a word occupies bits
+    ``[j*bits, (j+1)*bits)``. Wire truncation to ``packed_size(n)`` is the
+    caller's job (the full chunk-aligned array is what kernels consume).
+    """
+    if codes.ndim != 2 or codes.shape[1] != chunk:
+        raise ValueError(f"codes must be (C, {chunk}), got {codes.shape}")
+    ppw = codes_per_word(bits)
+    wpc = words_per_chunk(chunk, bits)
+    q = codes.astype(jnp.uint32)
+    pad = wpc * ppw - chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad)))
+    q = q.reshape(codes.shape[0], wpc, ppw)
+    words = functools.reduce(
+        jnp.bitwise_or,
+        [q[:, :, j] << jnp.uint32(j * bits) for j in range(ppw)],
+    )
+    return words.reshape(-1)
+
+
+def unpack_codes(words, bits: int, chunk: int, n_chunks: int):
+    """(n_chunks * words_per_chunk,) uint32 -> (n_chunks, chunk) uint32 codes.
+
+    Exact inverse of :func:`pack_codes` (pad codes come back as whatever
+    was packed; zero-padded wire words come back as code 0).
+    """
+    ppw = codes_per_word(bits)
+    wpc = words_per_chunk(chunk, bits)
+    if words.ndim != 1 or words.shape[0] != n_chunks * wpc:
+        raise ValueError(
+            f"words must be ({n_chunks * wpc},) for {n_chunks} chunks of "
+            f"{wpc} words, got {words.shape}"
+        )
+    mask = jnp.uint32(2**bits - 1)
+    w = words.reshape(n_chunks, wpc)
+    cols = [(w >> jnp.uint32(j * bits)) & mask for j in range(ppw)]
+    codes = jnp.stack(cols, axis=-1).reshape(n_chunks, wpc * ppw)
+    return codes[:, :chunk]

@@ -16,8 +16,10 @@ from repro.core.compression import (
     compressed_round,
     decode_aggregate,
     identity_codec,
+    lowrank_codec,
     mask_codec,
     quantize_codec,
+    realized_device_bytes,
     topk_codec,
     upload_bytes_per_round,
     wire_bytes,
@@ -96,6 +98,28 @@ def test_quantize_constant_vector_exact(rng):
     np.testing.assert_array_equal(np.asarray(dec), np.asarray(flat))
 
 
+def test_quantize_packed_error_bound(rng):
+    """Sub-byte (bit-packed) widths keep the per-chunk quantization error
+    bound: pack/unpack through the uint32 wire words is lossless, so only
+    the coarser step size shows."""
+    flat = _flat(rng)
+    for bits in (2, 4):
+        codec = quantize_codec(bits, chunk=64)
+        dec = codec.decode(
+            codec.encode(jax.random.PRNGKey(0), flat), flat.shape[0]
+        )
+        span = float(jnp.max(flat) - jnp.min(flat))
+        assert float(jnp.max(jnp.abs(dec - flat))) <= span / (2**bits - 1) + 1e-6
+
+
+def test_quantize_packed_constant_vector_exact():
+    """scale==0 chunks decode exactly through the packed wire too."""
+    flat = jnp.full((130,), -1.25, jnp.float32)
+    codec = quantize_codec(2, chunk=64)
+    dec = codec.decode(codec.encode(jax.random.PRNGKey(3), flat), 130)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(flat))
+
+
 def test_mask_unbiased(rng):
     flat = _flat(rng)
     codec = mask_codec(0.25)
@@ -118,6 +142,47 @@ def test_topk_keeps_largest():
     assert not codec.unbiased
 
 
+def test_lowrank_decode_shapes_and_determinism(rng):
+    """B is (rank, d2) with d1*d2 >= n; decode is a pure function of the
+    payload (the shipped key regrows the SAME sketch matrix server-side)."""
+    codec = lowrank_codec(4)
+    flat = _flat(rng, n=500)
+    payload = codec.encode(jax.random.PRNGKey(5), flat)
+    d1 = int(np.ceil(np.sqrt(500)))          # 23
+    assert payload["b"].shape == (4, -(-500 // d1))  # (rank, ceil(n/d1))
+    a = codec.decode(payload, 500)
+    b = codec.decode(payload, 500)
+    assert a.shape == (500,)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_lowrank_unbiased(seed):
+    """E[A A^T] = rank * I makes the sketch estimate unbiased; averaged
+    over reps the MEAN reconstruction error shrinks as 1/sqrt(reps) (the
+    per-coordinate variance is O(d1/rank), so we bound the mean, not the
+    max)."""
+    r = np.random.default_rng(seed)
+    flat = _flat(r, n=300)
+    codec = lowrank_codec(8)
+    assert codec.unbiased
+    reps = 200
+    acc = jnp.zeros_like(flat)
+    for i in range(reps):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        acc = acc + codec.decode(codec.encode(key, flat), 300) / reps
+    d1 = int(np.ceil(np.sqrt(300)))
+    # std of the mean estimate per coordinate ~ ||m_col|| sqrt(1/rank/reps);
+    # bound the mean abs deviation with a generous 5x safety factor
+    sigma = float(jnp.linalg.norm(flat) / np.sqrt(d1)) * np.sqrt(
+        (d1 + 1) / 8 / reps
+    )
+    mean_err = float(jnp.mean(jnp.abs(acc - flat)))
+    assert mean_err <= 5 * sigma + 1e-3, (mean_err, sigma)
+
+
 # ---------------------------------------------------------------------------
 # byte accounting
 # ---------------------------------------------------------------------------
@@ -134,8 +199,14 @@ def test_wire_bytes_ordering(rng):
     assert wire_bytes(quantize_codec(4), params) < wire_bytes(
         quantize_codec(8), params
     )
+    # sub-byte widths now ship bit-packed uint32 words, so the wire price
+    # and the physical store agree (see the packed-bytes regression below)
+    assert wire_bytes(quantize_codec(2), params) < wire_bytes(
+        quantize_codec(4), params
+    )
     assert wire_bytes(mask_codec(0.1), params) < dense / 5
     assert wire_bytes(topk_codec(0.05), params) < dense / 5
+    assert wire_bytes(lowrank_codec(8), params) < dense / 10
     # back-compat alias
     assert upload_bytes_per_round(mask_codec(0.1), params) == wire_bytes(
         mask_codec(0.1), params
@@ -150,6 +221,42 @@ def test_quantize_payload_bytes_match_wire(rng):
     flat = _flat(rng, n=100)
     payload = codec.encode(jax.random.PRNGKey(0), flat)
     assert codec.payload_bytes(payload) == codec.wire_bytes(100)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_quantize_packed_payload_is_physically_wire_sized(rng, bits):
+    """Regression (the wire_bytes-vs-realized mismatch): the DEVICE payload
+    of a quantized model delta — measured as actual buffer nbytes, not
+    accounting — must equal the static ``wire_bytes(codec, params)``. For
+    bits < 8 this only holds because encode ships bit-packed uint32 words
+    truncated to the tail chunk's own word count; for bits == 8 because
+    the byte store is truncated to the true n."""
+    model = mnist_2nn(n_classes=5, d_in=12)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(l.size for l in jax.tree.leaves(params))
+    flat = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    codec = quantize_codec(bits)  # default chunk=512: ragged tail in play
+    payload = codec.encode(jax.random.PRNGKey(0), flat)
+    assert (
+        realized_device_bytes(payload)
+        == wire_bytes(codec, params)
+        == codec.payload_bytes(payload)
+    )
+
+
+def test_identity_topk_lowrank_payloads_physically_wire_sized(rng):
+    """Same physical-equality pin for the other deterministic-size codecs
+    (mask is the documented exception: its dense masked store is a
+    simulation convenience)."""
+    model = mnist_2nn(n_classes=5, d_in=12)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(l.size for l in jax.tree.leaves(params))
+    flat = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    for codec in (identity_codec(), topk_codec(0.05), lowrank_codec(8)):
+        payload = codec.encode(jax.random.PRNGKey(1), flat)
+        assert realized_device_bytes(payload) == wire_bytes(codec, params), (
+            codec.name
+        )
 
 
 def test_mask_bytes_track_realized_mask(rng):
@@ -189,6 +296,59 @@ def test_quantize_fused_aggregate_matches_generic(rng, m, n):
     assert fused.shape == (n,)
     np.testing.assert_allclose(np.asarray(fused), np.asarray(generic),
                                atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+@pytest.mark.parametrize("m,n", [(1, 130), (2, 513), (17, 300)])
+def test_packed_fused_aggregate_matches_generic(rng, bits, m, n):
+    """The in-kernel unpack path: packed uint32 wire words through
+    ``packed_quantized_aggregate`` == vmap-decode + dense reduce. bits=3
+    exercises the slack bits of a width that does not divide 32."""
+    codec = quantize_codec(bits, chunk=64)
+    flats = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 4.0, m).astype(np.float32))
+    keys = jax.random.split(jax.random.PRNGKey(1), m)
+    payloads = jax.vmap(codec.encode)(keys, flats)
+    fused = decode_aggregate(codec, payloads, w, n, interpret=True)
+    generic = decode_aggregate(codec._replace(aggregate=None), payloads, w, n,
+                               interpret=True)
+    assert fused.shape == (n,)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(generic),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("m,n", [(1, 130), (2, 513), (17, 300)])
+def test_topk_fused_aggregate_matches_generic(rng, m, n):
+    """The sparse scatter kernel == vmap-decode + dense reduce (top-k
+    indices are unique per client, so scatter-add == scatter-set)."""
+    codec = topk_codec(0.05)
+    flats = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 4.0, m).astype(np.float32))
+    keys = jax.random.split(jax.random.PRNGKey(2), m)
+    payloads = jax.vmap(codec.encode)(keys, flats)
+    fused = decode_aggregate(codec, payloads, w, n, interpret=True)
+    generic = decode_aggregate(codec._replace(aggregate=None), payloads, w, n,
+                               interpret=True)
+    assert fused.shape == (n,)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(generic),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("m,n", [(2, 513), (17, 300)])
+def test_lowrank_fused_aggregate_matches_generic(rng, m, n):
+    """One batched dot_general contracting (client, rank) == vmap-decode +
+    dense reduce."""
+    codec = lowrank_codec(4)
+    flats = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 4.0, m).astype(np.float32))
+    keys = jax.random.split(jax.random.PRNGKey(3), m)
+    payloads = jax.vmap(codec.encode)(keys, flats)
+    fused = decode_aggregate(codec, payloads, w, n, interpret=True)
+    generic = decode_aggregate(codec._replace(aggregate=None), payloads, w, n,
+                               interpret=True)
+    assert fused.shape == (n,)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(generic),
+                               atol=1e-4)
 
 
 # ---------------------------------------------------------------------------
@@ -277,6 +437,33 @@ def test_engine_codec_compile_count(rng):
     )
     h = eng.run(5)
     assert len(h.records) == 5
+    assert all(np.isfinite(r.train_loss) for r in h.records)
+    assert eng.num_compilations <= 2
+    eng.round()  # fresh cohort, same executable
+    assert eng.num_compilations <= 2
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("codec_name", ["q4_packed", "q2_packed", "topk",
+                                        "lowrank"])
+def test_engine_wire_codec_compile_count(rng, codec_name):
+    """The new wire-path codecs (packed sub-byte quantize, sparse top-k
+    scatter, low-rank sketch) keep the single-executable guarantee: >=3
+    rounds + a fresh cohort stay within 2 distinct compilations."""
+    codec = {
+        "q4_packed": quantize_codec(4, chunk=256),
+        "q2_packed": quantize_codec(2, chunk=256),
+        "topk": topk_codec(0.05),
+        "lowrank": lowrank_codec(8),
+    }[codec_name]
+    model = mnist_2nn(n_classes=5, d_in=12)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = RoundEngine(
+        model.loss, params, _clients(rng, [7, 30, 13, 22, 9, 31, 18, 12]),
+        FedAvgConfig(C=0.4, E=2, B=8, lr=0.1, seed=3),
+        codec=codec,
+    )
+    h = eng.run(3)
     assert all(np.isfinite(r.train_loss) for r in h.records)
     assert eng.num_compilations <= 2
     eng.round()  # fresh cohort, same executable

@@ -20,9 +20,21 @@ import pytest
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core import FedAvgConfig, RoundEngine, identity_codec, quantize_codec
+from repro.core import (
+    FedAvgConfig,
+    RoundEngine,
+    identity_codec,
+    mask_codec,
+    quantize_codec,
+    topk_codec,
+)
 from repro.data.batching import pad_cohort
-from repro.kernels.ops import sharded_fedavg_aggregate
+from repro.kernels.fedavg_agg import fedavg_aggregate
+from repro.kernels.ops import (
+    sharded_fedavg_aggregate,
+    sharded_sparse_fedavg_aggregate,
+)
+from repro.kernels.sparse_agg import densify_ref
 from repro.launch.mesh import make_client_mesh
 from repro.models import mnist_2nn
 from repro.utils.tree import tree_weighted_mean
@@ -87,6 +99,39 @@ def test_sharded_fedavg_aggregate_matches_oracle(rng, K_per_shard):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
 
 
+@pytest.mark.parametrize("K_per_shard", [1, 3])
+def test_sharded_sparse_aggregate_matches_oracle(rng, K_per_shard):
+    """The sparse scatter kernel's partial-sum mode:
+    shard_map(sharded_sparse_fedavg_aggregate) over the (K, k) top-k
+    payloads == densify -> dense weighted mean, including zero-weight
+    (ghost) rows."""
+    mesh = make_client_mesh()
+    K, n, k = D * K_per_shard, 257, 9
+    idx = jnp.asarray(
+        np.stack([rng.choice(n, size=k, replace=False) for _ in range(K)]),
+        jnp.int32,
+    )
+    vals = jnp.asarray(rng.normal(size=(K, k)).astype(np.float32))
+    w = rng.uniform(0.5, 4.0, K).astype(np.float32)
+    if K > 1:
+        w[-1] = 0.0  # ghost row: must vanish from the average
+    w = jnp.asarray(w)
+
+    f = shard_map(
+        lambda i, v, ww: sharded_sparse_fedavg_aggregate(
+            i, v, ww, n, axis_name="clients", interpret=True
+        ),
+        mesh=mesh,
+        in_specs=(P("clients"), P("clients"), P("clients")),
+        out_specs=P(),
+        check_rep=False,
+    )
+    got = f(idx, vals, w)
+    want = fedavg_aggregate(densify_ref(idx, vals, n), w / w.sum(),
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # engine equivalence: sharded == unsharded, round for round
 # ---------------------------------------------------------------------------
@@ -132,6 +177,35 @@ def test_sharded_engine_matches_unsharded_quantize_codec(rng):
     multi-round tolerance is one code step rather than pure fp32."""
     shrd = _equiv_case(rng, quantize_codec(8, chunk=256), n_rounds=4,
                        param_atol=1e-3, loss_atol=1e-4)
+    assert shrd.num_compilations <= 2
+
+
+def test_sharded_engine_matches_unsharded_packed_quantize_codec(rng):
+    """Sub-byte (bit-packed) quantize path: the packed uint32 wire words go
+    through the psum-finished ``packed_quantized_aggregate`` kernel. Same
+    tolerance rationale as q8 — a 1-ulp param drift can flip one
+    stochastic-rounding draw, and 4-bit code steps are coarser."""
+    shrd = _equiv_case(rng, quantize_codec(4, chunk=256), n_rounds=3,
+                       param_atol=2e-3, loss_atol=1e-3)
+    assert shrd.num_compilations <= 2
+
+
+def test_sharded_engine_matches_unsharded_topk_codec(rng):
+    """Sparse top-k path: the scatter kernel's partial-sum mode vs the
+    unsharded scatter. Encode is deterministic, but fp32 reassociation in
+    earlier rounds can flip near-tied top-k MEMBERSHIP in later ones, so
+    the multi-round tolerance is looser than the plain path's 1e-5."""
+    shrd = _equiv_case(rng, topk_codec(0.05), n_rounds=3,
+                       param_atol=1e-3, loss_atol=1e-4)
+    assert shrd.num_compilations <= 2
+
+
+def test_sharded_engine_matches_unsharded_mask_codec(rng):
+    """Mask path (generic vmap-decode + psum): the Bernoulli mask depends
+    only on the slot-folded codec key, never on param values, so sharded ==
+    unsharded stays fp32-tight across rounds."""
+    shrd = _equiv_case(rng, mask_codec(0.25), n_rounds=3,
+                       param_atol=1e-5, loss_atol=1e-5)
     assert shrd.num_compilations <= 2
 
 

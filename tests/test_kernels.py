@@ -11,9 +11,16 @@ from repro.kernels import ref
 from repro.kernels.ce_loss import fused_cross_entropy
 from repro.kernels.fedavg_agg import fedavg_aggregate
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.quantized_agg import dequantize_ref, quantized_aggregate
+from repro.kernels.quantized_agg import (
+    dequantize_ref,
+    packed_quantized_aggregate,
+    quantized_aggregate,
+    unpack_ref,
+)
+from repro.kernels.sparse_agg import densify_ref, sparse_aggregate
 from repro.kernels.ssm_scan import ssm_scan
 from repro.kernels import ops
+from repro.utils.bitpack import pack_codes, words_per_chunk
 
 
 # ---------------------------------------------------------------------------
@@ -144,6 +151,144 @@ def test_quantized_aggregate_rejects_bad_inputs(rng):
         quantized_aggregate(codes[:, :30], lo, scale,
                             jnp.asarray([0.5, 0.5]), chunk=16, levels=255,
                             interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# packed sub-byte aggregation (in-kernel bit unpack)
+# ---------------------------------------------------------------------------
+
+def _packed_payload(rng, K, N, chunk, bits):
+    """Random packed wire words + ranges; returns (words, lo, scale, codes)
+    with ``codes`` the dense (K, C*chunk) ground truth."""
+    n_pad = -(-N // chunk) * chunk
+    levels = 2**bits - 1
+    codes = rng.integers(0, levels + 1, (K, n_pad)).astype(np.uint32)
+    words = jax.vmap(
+        lambda c: pack_codes(c.reshape(-1, chunk), bits, chunk)
+    )(jnp.asarray(codes))
+    C = n_pad // chunk
+    lo = rng.normal(size=(K, C)).astype(np.float32)
+    scale = rng.uniform(0.0, 2.0, (K, C)).astype(np.float32)
+    scale[rng.uniform(size=scale.shape) < 0.2] = 0.0  # constant chunks
+    return words, jnp.asarray(lo), jnp.asarray(scale), jnp.asarray(codes)
+
+
+@pytest.mark.parametrize("K", [1, 2, 17])
+@pytest.mark.parametrize("N,chunk,bc,bits", [
+    (33, 16, 4, 4),    # ragged N, 8 codes/word
+    (1000, 64, 3, 2),  # ragged N, 16 codes/word
+    (250, 30, 2, 3),   # width AND chunk that don't divide the word
+])
+def test_packed_quantized_aggregate_matches_oracle(rng, K, N, chunk, bc, bits):
+    """Acceptance: the fused unpack+dequantize+accumulate kernel ==
+    unpack_ref -> dequantize_ref -> fedavg_aggregate, for K in {1, 2, 17},
+    ragged N, slack-bit widths, scale==0 chunks."""
+    levels = 2**bits - 1
+    words, lo, scale, codes = _packed_payload(rng, K, N, chunk, bits)
+    w = jnp.asarray(rng.uniform(0.1, 5.0, K).astype(np.float32))
+    w = w / w.sum()
+    out = packed_quantized_aggregate(words, lo, scale, w, bits=bits,
+                                     chunk=chunk, levels=levels,
+                                     block_chunks=bc, interpret=True)
+    unpacked = unpack_ref(words, bits=bits, chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(unpacked), np.asarray(codes))
+    dense = dequantize_ref(unpacked.astype(jnp.uint32), lo, scale,
+                           chunk=chunk, levels=levels)
+    want = fedavg_aggregate(dense, w, interpret=True)
+    n_pad = codes.shape[1]
+    assert out.shape == (n_pad,) and out.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+def test_packed_quantized_aggregate_rejects_bad_inputs(rng):
+    words, lo, scale, _ = _packed_payload(rng, 2, 64, 16, 4)
+    with pytest.raises(ValueError, match="pre-normalized"):
+        packed_quantized_aggregate(words, lo, scale, jnp.asarray([1.0, 2.0]),
+                                   bits=4, chunk=16, levels=15,
+                                   interpret=True)
+    with pytest.raises(ValueError, match="bits in 1..7"):
+        packed_quantized_aggregate(words, lo, scale, jnp.asarray([0.5, 0.5]),
+                                   bits=8, chunk=16, levels=255,
+                                   interpret=True)
+    wpc = words_per_chunk(16, 4)
+    with pytest.raises(ValueError, match=f"C\\*{wpc}"):
+        packed_quantized_aggregate(words[:, :3], lo, scale,
+                                   jnp.asarray([0.5, 0.5]), bits=4, chunk=16,
+                                   levels=15, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# sparse top-k scatter-accumulate aggregation
+# ---------------------------------------------------------------------------
+
+def _sparse_payload(rng, K, n, k, dtype=np.float32):
+    idx = np.stack(
+        [rng.choice(n, size=k, replace=False) for _ in range(K)]
+    ).astype(np.int32)
+    vals = rng.normal(size=(K, k)).astype(dtype)
+    return jnp.asarray(idx), jnp.asarray(vals)
+
+
+@pytest.mark.parametrize("K", [1, 2, 17])
+@pytest.mark.parametrize("n,k,bc", [(37, 3, None), (513, 25, 2), (300, 15, 4)])
+def test_sparse_aggregate_matches_densify_oracle(rng, K, n, k, bc):
+    """Acceptance: the scatter-accumulate kernel == densify_ref ->
+    fedavg_aggregate for K in {1, 2, 17} and ragged n, including the
+    client-block-padding path (bc not dividing K)."""
+    idx, vals = _sparse_payload(rng, K, n, k)
+    w = jnp.asarray(rng.uniform(0.1, 5.0, K).astype(np.float32))
+    w = w / w.sum()
+    out = sparse_aggregate(idx, vals, w, n, block_clients=bc, interpret=True)
+    want = fedavg_aggregate(densify_ref(idx, vals, n), w, interpret=True)
+    assert out.shape == (n,) and out.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+def test_sparse_aggregate_bf16_values(rng):
+    """bf16 payload values accumulate in fp32 (the accum_dtype contract)."""
+    idx, vals = _sparse_payload(rng, 5, 200, 11)
+    vals16 = vals.astype(jnp.bfloat16)
+    w = jnp.full((5,), 0.2, jnp.float32)
+    out = sparse_aggregate(idx, vals16, w, 200, interpret=True)
+    want = fedavg_aggregate(densify_ref(idx, vals16, 200), w, interpret=True)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-2)
+
+
+def test_sparse_aggregate_zero_weight_client_vanishes(rng):
+    """A weight-0 (ghost) client contributes nothing — the cohort-padding
+    contract the sharded lane relies on."""
+    idx, vals = _sparse_payload(rng, 3, 100, 7)
+    w = jnp.asarray([0.5, 0.5, 0.0])
+    out = sparse_aggregate(idx, vals, w, 100, interpret=True)
+    w2 = jnp.asarray([0.5, 0.5])
+    want = sparse_aggregate(idx[:2], vals[:2], w2, 100, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-6)
+
+
+def test_sparse_aggregate_duplicate_indices_accumulate(rng):
+    """Duplicate indices WITHIN a client add — the kernel and densify_ref
+    agree on additive semantics (top-k never emits duplicates; add == set
+    there)."""
+    idx = jnp.asarray([[2, 2, 5]], jnp.int32)
+    vals = jnp.asarray([[1.0, 3.0, -2.0]], jnp.float32)
+    w = jnp.ones((1,), jnp.float32)
+    out = sparse_aggregate(idx, vals, w, 8, interpret=True)
+    want = np.zeros(8, np.float32)
+    want[2], want[5] = 4.0, -2.0
+    np.testing.assert_allclose(np.asarray(out), want, atol=1e-6)
+
+
+def test_sparse_aggregate_rejects_bad_inputs(rng):
+    idx, vals = _sparse_payload(rng, 2, 64, 4)
+    with pytest.raises(ValueError, match="pre-normalized"):
+        sparse_aggregate(idx, vals, jnp.asarray([1.0, 2.0]), 64,
+                         interpret=True)
+    with pytest.raises(ValueError, match="share a"):
+        sparse_aggregate(idx[:, :3], vals, jnp.asarray([0.5, 0.5]), 64,
+                         interpret=True)
+    with pytest.raises(ValueError, match="weights must be"):
+        sparse_aggregate(idx, vals, jnp.asarray([1.0]), 64, interpret=True)
 
 
 # ---------------------------------------------------------------------------

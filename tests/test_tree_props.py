@@ -10,6 +10,13 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.compression import mask_codec, quantize_codec, topk_codec
+from repro.utils.bitpack import (
+    codes_per_word,
+    pack_codes,
+    packed_size,
+    unpack_codes,
+    words_per_chunk,
+)
 from repro.utils.tree import (
     tree_ravel,
     tree_ravel_stacked,
@@ -107,7 +114,7 @@ def test_tree_ravel_stacked_rejects_empty_tree():
     seed=st.integers(0, 2**31 - 1),
     bf16=st.booleans(),
     case=st.sampled_from(["mixed", "tiny", "const"]),
-    codec_name=st.sampled_from(["q8", "q4", "mask"]),
+    codec_name=st.sampled_from(["q8", "q4", "q2", "mask"]),
 )
 def test_codec_unbiased_over_random_trees(seed, bf16, case, codec_name):
     """E[decode(encode(ravel(tree)))] == ravel(tree) for the unbiased
@@ -116,6 +123,7 @@ def test_codec_unbiased_over_random_trees(seed, bf16, case, codec_name):
     codec = {
         "q8": quantize_codec(8, chunk=16),
         "q4": quantize_codec(4, chunk=16),
+        "q2": quantize_codec(2, chunk=16),
         "mask": mask_codec(0.5),
     }[codec_name]
     assert codec.unbiased
@@ -136,9 +144,39 @@ def test_codec_unbiased_over_random_trees(seed, bf16, case, codec_name):
     if codec_name == "mask":
         tol = 3.5 * span * float(np.sqrt((1 / 0.5 - 1) / reps)) + 0.05
     else:
-        levels = 255 if codec_name == "q8" else 15
+        levels = {"q8": 255, "q4": 15, "q2": 3}[codec_name]
         tol = 4 * (2 * span / levels) / (2 * np.sqrt(reps)) + 2e-3
     np.testing.assert_allclose(np.asarray(acc), np.asarray(flat), atol=tol)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 500),
+    bits=st.integers(1, 7),
+    chunk=st.sampled_from([8, 16, 30, 64]),
+)
+def test_bitpack_roundtrip_property(seed, n, bits, chunk):
+    """pack -> unpack is the identity over random lengths, every sub-byte
+    width (including the slack-bit ones that don't divide 32), and ragged
+    tail chunks; and the TRUNCATED wire (packed_size(n) words, zero-padded
+    back to the chunk frame) still recovers the first n codes exactly."""
+    r = np.random.default_rng(seed)
+    C = -(-n // chunk)
+    codes = r.integers(0, 2**bits, (C, chunk)).astype(np.uint32)
+    words = pack_codes(jnp.asarray(codes), bits, chunk)
+    wpc = words_per_chunk(chunk, bits)
+    assert words.shape == (C * wpc,) and words.dtype == jnp.uint32
+    back = unpack_codes(words, bits, chunk, C)
+    np.testing.assert_array_equal(np.asarray(back), codes)
+    # ragged tail: the wire ships only packed_size(n) words
+    ps = packed_size(n, chunk, bits)
+    tail = n - (C - 1) * chunk
+    assert ps == (C - 1) * wpc + -(-tail // codes_per_word(bits))
+    assert ps <= C * wpc
+    rewire = jnp.pad(words[:ps], (0, C * wpc - ps))
+    back2 = np.asarray(unpack_codes(rewire, bits, chunk, C)).reshape(-1)[:n]
+    np.testing.assert_array_equal(back2, codes.reshape(-1)[:n])
 
 
 @settings(max_examples=10, deadline=None)

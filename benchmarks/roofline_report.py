@@ -40,7 +40,11 @@ def wire_path(quick=True):
     dense = wire_bytes(identity_codec(), params)
     grid = [
         identity_codec(), quantize_codec(8), quantize_codec(4),
-        quantize_codec(2), topk_codec(0.05), lowrank_codec(8),
+        quantize_codec(2),
+        # One odd 9..15 width: these used to price ideal bit-packing while
+        # shipping a full uint16 store — the gate now pins the packed path.
+        quantize_codec(12),
+        topk_codec(0.05), lowrank_codec(8),
         mask_codec(0.1),
     ]
     misses = []

@@ -20,6 +20,7 @@ from pathlib import Path
 
 from benchmarks import common
 from benchmarks import (
+    async_rounds,
     compression,
     fig1_averaging,
     fig3_large_E,
@@ -47,6 +48,7 @@ SUITES = {
     "round_engine_scaling": round_engine.scaling,
     "round_engine_superstep": round_engine.superstep,
     "round_engine_strategy": round_engine.strategy_overhead,
+    "round_engine_async": async_rounds.main,
     "compression": compression.main,
 }
 

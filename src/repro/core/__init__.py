@@ -16,6 +16,7 @@ from repro.core.engine import (
     build_simulation_round_step,
 )
 from repro.core.strategies import (
+    FedAsync,
     FedAvg,
     FedAvgM,
     FedSGD,
@@ -25,6 +26,8 @@ from repro.core.strategies import (
     strategy_from_json,
     strategy_to_json,
 )
+from repro.core.latency import LatencyModel
+from repro.core.scheduler import AsyncConfig, RoundScheduler
 from repro.core.compression import (
     Codec,
     build_compressed_round_step,

@@ -141,21 +141,26 @@ def quantize_codec(bits: int = 8, chunk: int = 512) -> Codec:
     Stochastic rounding keeps E[decode(encode(x))] = x per coordinate;
     constant chunks (hi == lo, scale 0) decode EXACTLY to lo.
 
-    The payload IS the wire: sub-byte widths (bits < 8) ship bit-packed
-    uint32 words (``utils.bitpack`` chunk framing — codes never straddle a
-    word, widths that do not divide 32 pay their slack bits honestly), and
-    byte-wide stores are truncated to the true ``n`` codes. Either way the
-    device-resident byte count equals ``wire_bytes(n)``.
+    The payload IS the wire: every width that does not fill a whole number
+    of bytes (bits % 8 != 0 — sub-byte AND the odd 9..15 widths) ships
+    bit-packed uint32 words (``utils.bitpack`` chunk framing — codes never
+    straddle a word, widths that do not divide 32 pay their slack bits
+    honestly), while bits == 8/16 ship exact uint8/uint16 stores truncated
+    to the true ``n`` codes. Either way the device-resident byte count
+    equals ``wire_bytes(n)`` for EVERY width 1..16 — the honesty contract
+    the ``roofline_wire`` gate enforces. (The odd 9..15 widths used to
+    price ideal packing while shipping a uint16 store, silently
+    under-reporting their upload bytes.)
 
     Aggregation fuses into the Pallas ``quantized_aggregate`` kernel (or
-    its ``packed_quantized_aggregate`` twin, which unpacks sub-byte words
+    its ``packed_quantized_aggregate`` twin, which unpacks the packed words
     inside the kernel body): the server reads the wire codes directly and
     never expands per-client fp32.
     """
     if bits < 1 or bits > 16:
         raise ValueError(f"quantize_codec supports 1..16 bits, got {bits}")
     levels = 2**bits - 1
-    packed = bits < 8
+    packed = bits % 8 != 0
     store_dtype = jnp.uint8 if bits <= 8 else jnp.uint16
     wpc = words_per_chunk(chunk, bits) if packed else None
 
@@ -249,8 +254,7 @@ def quantize_codec(bits: int = 8, chunk: int = 512) -> Codec:
         n_chunks = -(-n // chunk)
         if packed:
             return 4 * packed_size(n, chunk, bits) + 8 * n_chunks
-        # bits == 8/16 match the physical store exactly; the odd 9..15
-        # widths still price the ideal packing (stores stay uint16).
+        # bits == 8/16: the truncated uint8/uint16 store IS the wire.
         return -(-n * bits // 8) + 8 * n_chunks
 
     def payload_bytes(payload) -> int:
@@ -313,8 +317,15 @@ def topk_codec(keep_frac: float = 0.05) -> Codec:
     if not 0.0 < keep_frac <= 1.0:
         raise ValueError(f"keep_frac must be in (0, 1], got {keep_frac}")
 
+    # floor(keep_frac * n) in INTEGER arithmetic: the float product can
+    # land one ulp below the true value (100 * 0.29 -> 28.999...999, whose
+    # int() is 28, not the documented floor(p*n) = 29). Scaling keep_frac
+    # to an exact parts-per-billion numerator first makes the floor exact
+    # for every keep_frac a caller can plausibly write.
+    _frac_ppb = round(keep_frac * 10**9)
+
     def k_of(n: int) -> int:
-        return max(int(n * keep_frac), 1)
+        return max(n * _frac_ppb // 10**9, 1)
 
     def encode(key, flat):
         k = k_of(flat.shape[0])

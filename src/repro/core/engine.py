@@ -222,6 +222,37 @@ class RoundRecord:
     test_acc: Optional[float] = None
     test_loss: Optional[float] = None
     wall_s: float = 0.0
+    # Simulated duration of this round/apply under the scheduler's
+    # LatencyModel (0.0 when no straggler simulation is active): sync
+    # rounds are charged the barrier (slowest observed arrival), async
+    # applies the gap between consecutive buffer fills.
+    sim_s: float = 0.0
+
+
+def _monotone_crossing(curve, target: float) -> Optional[float]:
+    """First crossing of ``target`` on a best-so-far-monotone curve of
+    (x, acc) points, linearly interpolated between evaluations. If the
+    FIRST evaluated point already crosses there is nothing to interpolate
+    from — return its x (interpolating from a fictitious (0, 0.0) point
+    would under-report). Shared by rounds-to-target (x = round index) and
+    sim-time-to-target (x = cumulative simulated seconds)."""
+    if not curve:
+        return None
+    best = -np.inf
+    mono = []
+    for x, acc in curve:
+        best = max(best, acc)
+        mono.append((x, best))
+    prev: Optional[Tuple[float, float]] = None
+    for x, acc in mono:
+        if acc >= target:
+            if prev is None or acc == prev[1]:
+                return float(x)
+            prev_x, prev_a = prev
+            frac = (target - prev_a) / (acc - prev_a)
+            return float(prev_x + frac * (x - prev_x))
+        prev = (x, acc)
+    return None
 
 
 @dataclasses.dataclass
@@ -234,28 +265,20 @@ class History:
     def rounds_to_target(self, target: float) -> Optional[float]:
         """Paper's metric: make the curve monotone (best-so-far), then find
         the first crossing of ``target`` with linear interpolation between
-        evaluated rounds. If the FIRST evaluated round already crosses the
-        target there is nothing to interpolate from — return that round's
-        index (the old code interpolated from a fictitious (0, 0.0) point,
-        under-reporting the count)."""
-        curve = self.accuracy_curve()
-        if not curve:
-            return None
-        best = -np.inf
-        mono = []
-        for rnd, acc in curve:
-            best = max(best, acc)
-            mono.append((rnd, best))
-        prev: Optional[Tuple[int, float]] = None
-        for rnd, acc in mono:
-            if acc >= target:
-                if prev is None or acc == prev[1]:
-                    return float(rnd)
-                prev_r, prev_a = prev
-                frac = (target - prev_a) / (acc - prev_a)
-                return float(prev_r + frac * (rnd - prev_r))
-            prev = (rnd, acc)
-        return None
+        evaluated rounds."""
+        return _monotone_crossing(self.accuracy_curve(), target)
+
+    def sim_time_to_target(self, target: float) -> Optional[float]:
+        """Simulated wall-clock seconds to first cross ``target`` — the
+        metric that separates sync from buffered-async under stragglers
+        (rounds-to-target can prefer sync while every sync round waits on
+        the cohort's slowest phone). x-axis: cumulative ``sim_s``."""
+        t, curve = 0.0, []
+        for r in self.records:
+            t += r.sim_s
+            if r.test_acc is not None:
+                curve.append((t, r.test_acc))
+        return _monotone_crossing(curve, target)
 
 
 # ---------------------------------------------------------------------------
@@ -328,6 +351,8 @@ class RoundEngine:
         client_axis: str = "clients",
         device_sampling: bool = False,
         rounds_per_step: Optional[int] = None,
+        latency=None,
+        async_config=None,
     ):
         self.loss_fn = loss_fn
         # Private copy: the round executables donate the params buffer
@@ -452,6 +477,60 @@ class RoundEngine:
         self._round_jit = jax.jit(body, donate_argnums=(0, 1))
         self._superstep_jit = jax.jit(sbody, donate_argnums=(0, 1, 2))
 
+        # -- straggler simulation / buffered-async lane (core.scheduler) --
+        # ``latency`` is a core.latency.LatencyModel driving the simulated
+        # round clock (and dropout ghost-masking) in run(); ``async_config``
+        # is a core.scheduler.AsyncConfig switching run() to the
+        # buffered-async schedule. Both ride the per-round numpy-stream
+        # lane: the fused superstep scan and the on-device cohort draw have
+        # no per-round host hook for arrival masking, and the async client
+        # phase returns dense raveled deltas (codec integration is a
+        # documented non-goal for now).
+        self.latency = latency
+        self.async_config = async_config
+        if latency is not None and (device_sampling or mesh is not None):
+            raise ValueError(
+                "latency simulation needs the per-round numpy-stream lane: "
+                "construct the engine without device_sampling/mesh"
+            )
+        if async_config is not None:
+            if codec is not None or mesh is not None or device_sampling:
+                raise ValueError(
+                    "async_config is incompatible with codec=/mesh=/"
+                    "device_sampling=True: the buffered-async lane ships "
+                    "dense fp32 deltas through the split client/apply "
+                    "executables on the per-round numpy-stream lane"
+                )
+            if rounds_per_step not in (None, 1):
+                raise ValueError(
+                    "async_config replaces the round loop entirely; "
+                    f"rounds_per_step={rounds_per_step} has no meaning there"
+                )
+            from repro.utils.tree import tree_ravel_stacked
+
+            # Static unravel recipe for the aggregated (N,) delta; the
+            # leading dim of the dummy stack is irrelevant to the spec.
+            dummy = jax.tree.map(
+                lambda p: jnp.zeros((1,) + jnp.shape(p), jnp.float32),
+                self.params,
+            )
+            _, self._delta_spec = tree_ravel_stacked(dummy)
+            cbody = partial(
+                _engine_client_phase, loss_fn,
+                E=cfg.E, spe=packed.max_real_steps_per_epoch,
+                B=packed.batch_size, has_labels=self._y is not None,
+            )
+            abody = partial(
+                _engine_apply_buffer, self.strategy, self._delta_spec,
+                interpret=self.interpret,
+                accum_dtype=jnp.dtype(accum_dtype),
+            )
+            # No donation on the client phase: its params argument must
+            # survive for the other in-flight dispatches at the same server
+            # version. The apply phase donates like the fused round.
+            self._client_phase_jit = jax.jit(cbody)
+            self._apply_jit = jax.jit(abody, donate_argnums=(0, 1))
+
     # -- declarative construction ------------------------------------------
 
     @classmethod
@@ -496,6 +575,15 @@ class RoundEngine:
                 from repro.launch.mesh import make_client_mesh
 
                 mesh = make_client_mesh(axis=ex.mesh_axes)
+        latency, async_config = None, None
+        aspec = getattr(spec, "async_spec", None)
+        if aspec is not None:
+            from repro.core.scheduler import AsyncConfig
+
+            async_config = AsyncConfig(
+                buffer_k=aspec.buffer_k, concurrency=aspec.concurrency
+            )
+            latency = aspec.latency
         return cls(
             loss_fn,
             init_params,
@@ -510,6 +598,8 @@ class RoundEngine:
             client_axis=client_axis,
             device_sampling=ex.device_sampling,
             rounds_per_step=ex.rounds_per_step,
+            latency=latency,
+            async_config=async_config,
         )
 
     # -- introspection ----------------------------------------------------
@@ -629,50 +719,43 @@ class RoundEngine:
         ``target_acc`` early-stopping then happen at R-round granularity
         (chunk boundaries), and each round's ``wall_s`` is the amortized
         chunk time / R. ``None`` auto-selects (see
-        :meth:`_resolve_rounds_per_step`)."""
+        :meth:`_resolve_rounds_per_step`).
+
+        The per-round lane itself lives in ``core.scheduler``: a plain
+        engine gets the degenerate (bit-for-bit historical) schedule, an
+        engine with ``latency=`` gets straggler-simulated sync rounds, and
+        an engine with ``async_config=`` gets the buffered-async schedule
+        where ``n_rounds`` counts server APPLIES."""
+        if int(eval_every) < 1:
+            # Validated up front for BOTH lanes: eval_every reaches a
+            # modulo in the per-round loop and a floor-division in the
+            # superstep crossed-an-eval-point check, so 0 used to surface
+            # as a ZeroDivisionError only after the first round had
+            # already run.
+            raise ValueError(
+                f"eval_every must be >= 1, got {eval_every} (use a large "
+                "eval_every, not 0, to evaluate only at the end)"
+            )
         if target_acc is not None and self.eval_fn is None:
             raise ValueError(
                 "run(target_acc=...) needs an eval_fn to measure accuracy — "
                 "without one the target can never trigger and the run would "
                 "silently do all n_rounds"
             )
+        from repro.core.scheduler import RoundScheduler
+
+        if self.async_config is not None:
+            return RoundScheduler(self).run_async(
+                n_rounds, eval_every, target_acc, verbose
+            )
         R = self._resolve_rounds_per_step(rounds_per_step, n_rounds, eval_every)
         if R > 1:
             return self._run_supersteps(
                 n_rounds, R, eval_every, target_acc, verbose
             )
-        for i in range(n_rounds):
-            t0 = time.perf_counter()
-            metrics = self.round()
-            # Honest per-round timing: stop the clock only after the
-            # round's outputs are synced — once dispatch is async, the
-            # un-synced time would be a dispatch latency, not a round time.
-            loss = jax.block_until_ready(metrics["loss"])
-            rec = RoundRecord(
-                round=self.round_idx,
-                train_loss=float(loss),
-                wall_s=time.perf_counter() - t0,
-            )
-            # i, not self.round_idx, for the last-round check: round_idx is
-            # cumulative across run() calls, so a second run(n) would never
-            # hit its own final-round evaluation.
-            if self.eval_fn is not None and (
-                self.round_idx % eval_every == 0 or i == n_rounds - 1
-            ):
-                ev = self.eval_fn(self.params)
-                rec.test_acc = float(ev["acc"])
-                rec.test_loss = float(ev.get("loss", np.nan))
-                if verbose:
-                    print(
-                        f"round {self.round_idx:5d} loss {rec.train_loss:.4f} "
-                        f"test_acc {rec.test_acc:.4f}"
-                    )
-                self.history.records.append(rec)
-                if target_acc is not None and rec.test_acc >= target_acc:
-                    break
-            else:
-                self.history.records.append(rec)
-        return self.history
+        return RoundScheduler(self).run_sync(
+            n_rounds, eval_every, target_acc, verbose
+        )
 
     def _run_supersteps(
         self, n_rounds, R, eval_every, target_acc, verbose
@@ -728,7 +811,12 @@ class RoundEngine:
         a superstep boundary mid-run. The server strategy's state tree
         (e.g. FedAvgM's velocity) checkpoints alongside the params, and the
         strategy's serialized identity is recorded so ``restore`` can
-        refuse a mismatched engine."""
+        refuse a mismatched engine.
+
+        The run history rides in the metadata too: without it, a resumed
+        engine's ``rounds_to_target``/``accuracy_curve`` silently ignored
+        every pre-restore round — the curves claimed bit-for-bit resume
+        while starting from an empty history."""
         import json
 
         from repro.checkpoint.io import save_checkpoint
@@ -743,6 +831,9 @@ class RoundEngine:
                 "sample_key": [int(v) for v in np.asarray(self.sample_key)],
                 "device_sampling": self.device_sampling,
                 "strategy": self.strategy.name,
+                "history": [
+                    dataclasses.asdict(r) for r in self.history.records
+                ],
             },
         )
 
@@ -816,6 +907,14 @@ class RoundEngine:
         self.params = restored
         self.round_idx = int(meta["round_idx"])
         self.rng.bit_generator.state = json.loads(meta["rng_state"])
+        if "history" in meta:
+            # Resume the RECORDED curves too, so rounds_to_target /
+            # accuracy_curve on a resumed run see the pre-restore rounds.
+            # Absent in pre-PR7 checkpoints: those resume with an empty
+            # history exactly as before.
+            self.history = History(
+                [RoundRecord(**dict(d)) for d in meta["history"]]
+            )
         if "sample_key" in meta:  # absent in pre-superstep checkpoints
             self.sample_key = jnp.asarray(
                 np.asarray(meta["sample_key"], np.uint32)
@@ -859,12 +958,12 @@ def _assemble_batches(px, py, counts, spe_arr, ids, key, *, E, spe, B,
     # per-epoch reshuffling in ClientUpdate. Keying the sort by u + 2*[row
     # is padding] puts a uniform permutation of the client's n_k REAL rows
     # first and the tiled padding rows (in random order) after, so a
-    # client's active steps (spe_k * B <= n_k rows) sample its own examples
-    # WITHOUT replacement — exactly the legacy host semantics — and tiled
-    # duplicates are never over-drawn. Only the first spe*B positions feed
-    # the scan; ``spe`` is the largest REAL per-client step count, which
-    # can be one below n_pad // B (the pool keeps ceil rows so no example
-    # is truncated).
+    # client's active steps (spe_k = ceil(n_k / B)) train every one of its
+    # examples exactly once per epoch WITHOUT replacement, and the ragged
+    # final step fills its remaining slots with randomly-ordered tiled
+    # duplicates — the within-client resample fill the legacy host path
+    # (client_epoch_batches) promises. Only the first spe*B positions feed
+    # the scan; ``spe`` is the largest REAL per-client step count.
     #
     # Keys derive from the client's GLOBAL cohort slot (``slot0`` + local
     # index), not from one split over however many clients this call sees:
@@ -986,3 +1085,71 @@ def _engine_superstep(
         one_round, (params, outer, key), lrs
     )
     return params, outer, key, losses
+
+
+# -- buffered-async executables (core.scheduler) ----------------------------
+#
+# The async lane splits the fused round into two jitted phases so the
+# server can aggregate a buffer that mixes updates from different dispatch
+# groups. The split preserves every op and association of the fused round —
+# _assemble_batches with the same slot keying, the same vmapped
+# client_update, masked_weighted_loss's exact per-client/normalize/sum
+# phrasing, the same Pallas aggregate — so the degenerate schedule
+# (buffer_k == m, zero latency, staleness 0) reproduces _engine_round
+# bit-for-bit (tests/test_scheduler_async.py).
+
+def _engine_client_phase(
+    loss_fn, params, px, py, counts, spe_arr, ids, valid, key, lr,
+    *, E, spe, B, has_labels,
+):
+    """Dispatch half of a round: run ClientUpdate for a cohort against the
+    CURRENT params and return the raw ingredients the server buffers —
+    (width, N) raveled fp32 deltas, (width,) per-client mean losses, and
+    (width,) raw example weights (ghost-masked by ``valid``)."""
+    from repro.utils.tree import tree_ravel_stacked
+
+    batch, mask, w = _assemble_batches(
+        px, py, counts, spe_arr, ids, key, E=E, spe=spe, B=B,
+        has_labels=has_labels,
+    )
+    w = w * valid
+    upd = jax.vmap(
+        lambda b, msk: client_update(loss_fn, params, b, msk, lr)
+    )
+    client_params, losses = upd(batch, mask)
+    deltas = jax.tree.map(
+        lambda c, p: (c - p).astype(jnp.float32), client_params, params
+    )
+    flat, _ = tree_ravel_stacked(deltas)
+    # Identical phrasing to masked_weighted_loss's per-client half; the
+    # apply phase finishes the weighted sum once the buffer's weights are
+    # known.
+    per_client = jnp.sum(losses * mask, axis=1) / jnp.maximum(
+        jnp.sum(mask, axis=1), 1.0
+    )
+    return flat, per_client, w
+
+
+def _engine_apply_buffer(
+    strategy, spec, params, outer, flat, per_loss, w, stale,
+    *, interpret, accum_dtype,
+):
+    """Server half: staleness-discount the buffered weights through the
+    strategy protocol, normalize ONCE, aggregate via the Pallas kernel, and
+    step the server strategy. ``stale`` is the (K,) server-version gap per
+    update; a synchronous buffer passes zeros, and the base strategy's
+    all-ones ``staleness_scale`` makes the discount an exact no-op there.
+    Ghost rows (forced partial applies) carry w == 0 and vanish from both
+    the aggregate and the loss, exactly like pad_cohort ghosts."""
+    from repro.kernels.fedavg_agg import fedavg_aggregate
+    from repro.utils.tree import tree_unravel
+
+    w = w * strategy.staleness_scale(stale)
+    wn = w / jnp.sum(w)
+    avg = fedavg_aggregate(
+        flat, wn, interpret=interpret, accum_dtype=accum_dtype
+    )
+    agg_delta = tree_unravel(spec, avg)
+    outer, new_params = strategy.apply(outer, params, agg_delta)
+    loss = jnp.sum(wn * per_loss)
+    return new_params, outer, loss

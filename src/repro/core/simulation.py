@@ -91,6 +91,8 @@ class FederatedTrainer:
         strategy=None,
         interpret: Optional[bool] = None,
         accum_dtype=jnp.float32,
+        latency=None,
+        async_config=None,
     ):
         # Regression (PR 5): the trainer used to accept neither interpret=
         # nor accum_dtype=, so callers could not reach those engine knobs
@@ -101,6 +103,7 @@ class FederatedTrainer:
             strategy=strategy, interpret=interpret, accum_dtype=accum_dtype,
             mesh=mesh, client_axis=client_axis,
             device_sampling=device_sampling,
+            latency=latency, async_config=async_config,
         )
         self._wrap(engine, client_data)
 

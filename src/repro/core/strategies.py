@@ -66,6 +66,18 @@ class ServerStrategy:
         """Hook for strategies that constrain the client-side config
         (``FedSGD`` pins E=1, B=None). Called at engine construction."""
 
+    def staleness_scale(self, staleness):
+        """Per-update weight multiplier for the buffered-async lane.
+
+        ``staleness`` is a float array of server-version gaps (0 for an
+        update computed against the current params; the sync lane always
+        passes zeros). The returned array scales each update's RAW example
+        weight BEFORE normalization, inside the apply executable. The base
+        returns ones — multiplying by 1.0 is exact in IEEE arithmetic, so
+        strategies that ignore staleness keep the sync lane's bit-for-bit
+        degenerate-schedule guarantee for free."""
+        return jnp.ones_like(staleness)
+
     @property
     def name(self) -> str:
         """Canonical serialized form — the checkpoint guard compares this."""
@@ -141,10 +153,42 @@ class FedAvgM(ServerStrategy):
         return v, new_params
 
 
+@dataclasses.dataclass(frozen=True)
+class FedAsync(ServerStrategy):
+    """Staleness-discounted server step for the buffered-async lane
+    (Xie et al. 2019's FedAsync, polynomial discounting): an update
+    computed against params ``s`` server versions old is down-weighted by
+
+        scale(s) = (1 + s) ** -staleness_exp
+
+    before the buffer's weighted mean, and the mean delta is applied with
+    a server mixing rate: ``w <- w + server_lr * Δ``. At ``staleness_exp=0,
+    server_lr=1`` every scale is exactly 1.0 and the apply is FedAvg's —
+    so the discount-free async step degrades gracefully to plain buffered
+    FedAvg (FedBuff), and on a synchronous (zero-staleness) schedule this
+    strategy is bit-for-bit FedAvg. Stateless, so checkpoints round-trip
+    through the same params-only tree as FedAvg (tests pin it)."""
+
+    staleness_exp: float = 0.5
+    server_lr: float = 1.0
+    kind: ClassVar[str] = "fedasync"
+
+    def staleness_scale(self, staleness):
+        return (1.0 + staleness) ** jnp.float32(-self.staleness_exp)
+
+    def apply(self, opt_state, params, agg_delta):
+        new_params = jax.tree.map(
+            lambda p, d: (p + self.server_lr * d).astype(p.dtype),
+            params, agg_delta,
+        )
+        return opt_state, new_params
+
+
 STRATEGIES: Dict[str, type] = {
     FedAvg.kind: FedAvg,
     FedSGD.kind: FedSGD,
     FedAvgM.kind: FedAvgM,
+    FedAsync.kind: FedAsync,
 }
 
 

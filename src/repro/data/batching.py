@@ -24,11 +24,18 @@ def client_epoch_batches(
     epochs: int,
     seed: int,
 ):
-    """Returns (bx, by) with shapes (n_steps, B, ...) covering E epochs."""
+    """Returns (bx, by) with shapes (n_steps, B, ...) covering E epochs.
+
+    ``steps_per_epoch`` is ceil(n / B): every example appears in every
+    epoch, with the ragged final batch resample-filled from the client's
+    own data as the module docstring promises. (The floor ``n // B`` this
+    used to compute silently DROPPED each epoch's tail — up to B-1
+    examples per client per epoch never trained; ``pack_clients`` mirrored
+    the same floor. Pinned by the per-epoch coverage regression test.)"""
     rng = np.random.default_rng(seed)
     n = len(x)
     b = n if batch_size is None else min(batch_size, n)
-    steps_per_epoch = max(n // b, 1) if batch_size is not None else 1
+    steps_per_epoch = -(-n // b) if batch_size is not None else 1
     xs, ys = [], []
     for _ in range(epochs):
         perm = rng.permutation(n)
@@ -57,8 +64,12 @@ class PackedClients(NamedTuple):
     counts:           (K,) float32 — RAW example counts n_k. These are the
                       server weights; padding never changes them.
     steps_per_epoch:  (K,) int32 — the client's REAL optimizer steps per
-                      epoch, max(n_k // B, 1); steps beyond this are masked
-                      no-ops in the engine.
+                      epoch, ceil(n_k / B); steps beyond this are masked
+                      no-ops in the engine. Ceil, not floor: the ragged
+                      final step trains the epoch's tail examples (plus
+                      resample-fill duplicates), so every example
+                      participates in every epoch — matching
+                      ``client_epoch_batches``.
     batch_size:       static per-step batch size B (== n_pad for B=None).
     max_steps_per_epoch: static spe = n_pad // batch_size; the padded epoch
                       length every client shares.
@@ -99,10 +110,10 @@ class PackedClients(NamedTuple):
     @property
     def max_real_steps_per_epoch(self) -> int:
         """Largest per-client REAL step count — the scan length the engine
-        actually needs. ``max_steps_per_epoch`` (= n_pad // B) can exceed it
-        by one when n_max is not a step multiple: the pool keeps ceil rows
-        so no example is truncated, but scanning that extra step would be a
-        masked no-op for every client."""
+        actually needs. With the ceil step schedule this equals
+        ``max_steps_per_epoch`` (= n_pad // B) whenever the largest client
+        sets the pool size; it is kept as the engine's canonical scan
+        length so the identity survives packing-policy changes."""
         return int(self.steps_per_epoch.max())
 
     def overhead(self) -> float:
@@ -124,7 +135,7 @@ def pack_clients(
     """Pack per-client (x, y) arrays into one statically-shaped population.
 
     Shape-bucket scheme: each client's per-epoch step count
-    max(n_k // B, 1) is rounded up to the next power of two, giving a small
+    max(ceil(n_k / B), 1) is rounded up to the next power of two, giving a small
     set of diagnostic shape classes. Storage uses one common pool of
     ceil(max n_k / B) * B rows so one executable serves every sampled
     cohort; per-client real step counts ride along for masking. For B=None
@@ -142,7 +153,9 @@ def pack_clients(
         n_pad = B
     else:
         B = int(batch_size)
-        steps = np.maximum(counts // B, 1).astype(np.int32)
+        # Ceil: the ragged final step is a real (tail + resample-fill)
+        # step, not dropped — see the PackedClients.steps_per_epoch note.
+        steps = np.maximum(-(-counts // B), 1).astype(np.int32)
         step_buckets = np.asarray([_next_pow2(int(s)) for s in steps], np.int64)
         bucket_sizes = tuple(sorted(set(int(b) * B for b in step_buckets)))
         buckets = np.searchsorted(np.asarray(bucket_sizes), step_buckets * B)

@@ -245,15 +245,20 @@ def packed_quantized_aggregate(
 ) -> jnp.ndarray:
     """Fused unpack + dequantize + weighted mean -> (C*chunk,).
 
-    The sub-byte twin of :func:`quantized_aggregate`: the input is the
+    The bit-packed twin of :func:`quantized_aggregate`: the input is the
     bit-packed uint32 wire form itself (``utils.bitpack`` chunk framing,
     ``wpc = ceil(chunk / (32 // bits))`` words per chunk), unpacked in the
-    kernel body — dense codes never exist outside VMEM registers. Weights
-    follow the same pre-normalized contract; block policy mirrors
+    kernel body — dense codes never exist outside VMEM registers. Any
+    width 1..15 works (the generic ``32 // bits`` codes-per-word unpack
+    covers the odd 9..15 widths the quantize codec now packs too); 16-bit
+    codes ship as exact uint16 stores through the unpacked kernel instead.
+    Weights follow the same pre-normalized contract; block policy mirrors
     ``quantized_aggregate`` (one grid step under the interpreter).
     """
-    if not 1 <= bits <= 7:
-        raise ValueError(f"packed aggregation is for bits in 1..7, got {bits}")
+    if not 1 <= bits <= 15:
+        raise ValueError(
+            f"packed aggregation is for bits in 1..15, got {bits}"
+        )
     wpc = -(-chunk // (32 // bits))
     if words.ndim != 2 or words.shape[1] % wpc:
         raise ValueError(

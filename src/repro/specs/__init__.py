@@ -1,4 +1,5 @@
 from repro.specs.spec import (
+    AsyncSpec,
     CodecSpec,
     ExecutionSpec,
     ExperimentSpec,

@@ -39,6 +39,7 @@ import json
 from typing import Any, Dict, Mapping, Optional
 
 from repro.core.fedavg import FedAvgConfig
+from repro.core.latency import LatencyModel
 from repro.core.strategies import (
     FedAvg,
     ServerStrategy,
@@ -144,6 +145,23 @@ class CodecSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class AsyncSpec:
+    """The buffered-async axis (docs/engine.md "Asynchronous rounds"):
+    the server applies an aggregate whenever ``buffer_k`` of
+    ``concurrency`` in-flight updates arrive, under the straggler/dropout
+    behavior of ``latency`` (a ``core.latency.LatencyModel``).
+    ``concurrency=None`` uses the cohort size ``max(round(C*K), 1)``.
+    ``buffer_k == concurrency`` with a zero LatencyModel is bit-for-bit
+    the synchronous lane. Pair with ``strategy=FedAsync(...)`` for
+    staleness-discounted aggregation; plain FedAvg ignores staleness
+    (FedBuff-style uniform buffering)."""
+
+    buffer_k: int = 4
+    concurrency: Optional[int] = None
+    latency: LatencyModel = LatencyModel()
+
+
+@dataclasses.dataclass(frozen=True)
 class ExecutionSpec:
     """HOW the experiment runs — the engine's execution lane, orthogonal to
     WHAT it computes. ``mesh_axes`` names the cohort-sharding client axis
@@ -171,6 +189,9 @@ class ExperimentSpec:
     strategy: ServerStrategy = FedAvg()
     codec: Optional[CodecSpec] = None
     execution: ExecutionSpec = ExecutionSpec()
+    # None = synchronous rounds; an AsyncSpec switches run() to the
+    # buffered-async schedule (and carries the straggler model).
+    async_spec: Optional[AsyncSpec] = None
     # Run-length defaults for scripts/benchmarks (run() args still win).
     rounds: int = 100
     target_acc: Optional[float] = None
@@ -209,6 +230,10 @@ class ExperimentSpec:
                 if self.codec is not None else None
             ),
             "execution": dataclasses.asdict(self.execution),
+            "async_spec": (
+                dataclasses.asdict(self.async_spec)
+                if self.async_spec is not None else None
+            ),
             "rounds": self.rounds,
             "target_acc": self.target_acc,
         }
@@ -218,6 +243,12 @@ class ExperimentSpec:
     def from_json(s: str) -> "ExperimentSpec":
         d = json.loads(s)
         model = ModelSpec(**d["model"])
+        aspec = None
+        if d.get("async_spec"):
+            a = dict(d["async_spec"])
+            aspec = AsyncSpec(
+                latency=LatencyModel(**a.pop("latency", {})), **a
+            )
         return ExperimentSpec(
             name=d["name"],
             model=model,
@@ -226,6 +257,7 @@ class ExperimentSpec:
             strategy=strategy_from_json(d["strategy"]),
             codec=CodecSpec(**d["codec"]) if d.get("codec") else None,
             execution=ExecutionSpec(**d.get("execution", {})),
+            async_spec=aspec,
             rounds=int(d.get("rounds", 100)),
             target_acc=d.get("target_acc"),
         )

@@ -1,16 +1,18 @@
-"""Sub-byte code packing: chunk-framed uint32 words for the quantize wire.
+"""Odd-width code packing: chunk-framed uint32 words for the quantize wire.
 
-``quantize_codec(bits < 8)`` prices its wire at the true bit width, and
-this module is what makes the device payload physically match that price:
-integer codes in ``[0, 2**bits)`` pack little-endian into uint32 words, so
-the array that travels (and that the fused Pallas kernel reads) is the
-bit-packed wire form itself, not a byte-per-code simulation stand-in.
+``quantize_codec`` packs every width that does not fill whole bytes
+(bits % 8 != 0 — sub-byte AND 9..15), pricing its wire at the true bit
+width, and this module is what makes the device payload physically match
+that price: integer codes in ``[0, 2**bits)`` pack little-endian into
+uint32 words, so the array that travels (and that the fused Pallas kernel
+reads) is the bit-packed wire form itself, not a byte-per-code simulation
+stand-in.
 
 Framing is PER CHUNK, mirroring the codec's (lo, scale) chunking: each
 ``chunk``-code row packs independently into ``words_per_chunk`` words, and
 codes never straddle a word boundary — ``codes_per_word = 32 // bits``
 codes per word, with ``32 % bits`` bits of slack wasted per word for
-widths that do not divide 32 (3, 5, 6, 7). Word-aligned chunk frames keep
+widths that do not divide 32 (3, 5, 6, 7, 9..15). Word-aligned chunk frames keep
 the kernel's per-chunk (lo, scale) tiles and its unpack loop statically
 shaped; the slack is charged honestly by ``packed_size`` and therefore by
 ``wire_bytes``.

@@ -99,17 +99,32 @@ def test_quantize_constant_vector_exact(rng):
 
 
 def test_quantize_packed_error_bound(rng):
-    """Sub-byte (bit-packed) widths keep the per-chunk quantization error
-    bound: pack/unpack through the uint32 wire words is lossless, so only
-    the coarser step size shows."""
+    """Bit-packed widths (bits % 8 != 0 — sub-byte AND the odd 9..15)
+    keep the per-chunk quantization error bound: pack/unpack through the
+    uint32 wire words is lossless, so only the coarser step size shows."""
     flat = _flat(rng)
-    for bits in (2, 4):
+    for bits in (2, 4, 9, 12, 15):
         codec = quantize_codec(bits, chunk=64)
         dec = codec.decode(
             codec.encode(jax.random.PRNGKey(0), flat), flat.shape[0]
         )
         span = float(jnp.max(flat) - jnp.min(flat))
         assert float(jnp.max(jnp.abs(dec - flat))) <= span / (2**bits - 1) + 1e-6
+
+
+def test_quantize_every_width_is_physically_wire_sized(rng):
+    """The honesty contract for the WHOLE width range 1..16: the physical
+    nbytes of the encoded payload equal the static ``wire_bytes(n)``.
+    Before the packing fix the odd 9..15 widths shipped a full uint16
+    store (2 bytes/code) while wire_bytes priced ideal 32//bits packing —
+    the realized upload silently exceeded the reported one."""
+    from repro.core.compression import realized_device_bytes
+
+    flat = _flat(rng, n=777)
+    for bits in range(1, 17):
+        codec = quantize_codec(bits)
+        payload = codec.encode(jax.random.PRNGKey(0), flat)
+        assert realized_device_bytes(payload) == codec.wire_bytes(777), bits
 
 
 def test_quantize_packed_constant_vector_exact():
@@ -140,6 +155,28 @@ def test_topk_keeps_largest():
     dec = codec.decode(codec.encode(jax.random.PRNGKey(0), flat), 4)
     np.testing.assert_allclose(dec, [0.0, -5.0, 0.0, 3.0])
     assert not codec.unbiased
+
+
+def test_topk_k_of_integer_boundaries():
+    """Regression: ``k_of`` used ``int(n * keep_frac)``, and the float
+    product 100 * 0.29 is one ulp BELOW 29 — a user asking for 29% of 100
+    coordinates got 28. k must come from integer arithmetic on the
+    decimal the user wrote."""
+    for frac, n, want in [
+        (0.29, 100, 29),   # the one-ulp float bug
+        (0.1, 100, 10),
+        (0.3, 10, 3),
+        (1.0, 7, 7),       # keep everything
+        (0.01, 10, 1),     # floor would give 0; k is clamped to >= 1
+        (0.07, 300, 21),   # 300 * 0.07 = 21.000000000000004 (ulp HIGH)
+    ]:
+        codec = topk_codec(frac)
+        payload = codec.encode(
+            jax.random.PRNGKey(0),
+            jnp.arange(1, n + 1, dtype=jnp.float32),
+        )
+        assert payload["idx"].shape == (want,), (frac, n)
+        assert codec.wire_bytes(n) == 8 * want, (frac, n)
 
 
 def test_lowrank_decode_shapes_and_determinism(rng):
@@ -223,14 +260,16 @@ def test_quantize_payload_bytes_match_wire(rng):
     assert codec.payload_bytes(payload) == codec.wire_bytes(100)
 
 
-@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("bits", [2, 4, 8, 12])
 def test_quantize_packed_payload_is_physically_wire_sized(rng, bits):
     """Regression (the wire_bytes-vs-realized mismatch): the DEVICE payload
     of a quantized model delta — measured as actual buffer nbytes, not
     accounting — must equal the static ``wire_bytes(codec, params)``. For
-    bits < 8 this only holds because encode ships bit-packed uint32 words
-    truncated to the tail chunk's own word count; for bits == 8 because
-    the byte store is truncated to the true n."""
+    bits % 8 != 0 this only holds because encode ships bit-packed uint32
+    words truncated to the tail chunk's own word count; for bits == 8/16
+    because the byte store is truncated to the true n. bits=12 pins the
+    odd 9..15 widths, which used to price ideal packing while shipping a
+    full uint16 store."""
     model = mnist_2nn(n_classes=5, d_in=12)
     params = model.init(jax.random.PRNGKey(0))
     n = sum(l.size for l in jax.tree.leaves(params))

@@ -20,6 +20,43 @@ def test_client_epoch_batches_schedule(rng):
     assert len(np.unique(first_epoch, axis=0)) == 600
 
 
+def test_client_epoch_batches_ragged_tail_covers_every_epoch(rng):
+    """S4 regression: for n % B != 0 (n > B) the floor step count silently
+    DROPPED each epoch's tail — with n=23, B=5 only 20 of 23 examples
+    trained per epoch. The schedule must be ceil(n/B) steps with the
+    ragged final batch resample-filled from the client's own data, so
+    every example appears in every epoch."""
+    n, B, E = 23, 5, 3
+    x = np.arange(n, dtype=np.float32)[:, None]
+    y = np.arange(n, dtype=np.int32)
+    bx, by = client_epoch_batches(x, y, batch_size=B, epochs=E, seed=0)
+    spe = -(-n // B)  # 5, not the old floor's 4
+    assert bx.shape == (E * spe, B, 1)
+    for e in range(E):
+        epoch = bx[e * spe:(e + 1) * spe].ravel().astype(int)
+        assert set(epoch) == set(range(n)), f"epoch {e} dropped examples"
+        # fill values are in-client resamples, so exactly B*spe - n dupes
+        assert len(epoch) == spe * B
+    np.testing.assert_array_equal(by.ravel(), bx.ravel().astype(np.int32))
+
+
+def test_pack_clients_ragged_tail_step_counts():
+    """pack_clients mirrors the same ceil schedule: a 23-example client at
+    B=5 gets 5 real steps/epoch (was 4), and the shared pool still holds
+    every example of the largest client."""
+    from repro.data.batching import pack_clients
+
+    x23 = np.arange(23, dtype=np.float32)[:, None]
+    x7 = np.arange(7, dtype=np.float32)[:, None]
+    p = pack_clients([(x23, np.zeros(23, np.int32)),
+                      (x7, np.zeros(7, np.int32))], 5)
+    assert list(p.steps_per_epoch) == [5, 2]
+    assert p.x.shape[1] == 25  # ceil(23/5)*5
+    assert p.max_real_steps_per_epoch == 5
+    # raw counts (the server weights) are untouched by padding
+    np.testing.assert_array_equal(p.counts, [23.0, 7.0])
+
+
 def test_client_epoch_batches_binf():
     x = np.arange(24, dtype=np.float32).reshape(12, 2)
     bx, by = client_epoch_batches(x, None, batch_size=None, epochs=3, seed=0)

@@ -337,6 +337,18 @@ def test_run_target_acc_without_eval_fn_raises(rng):
         tr.run(3, target_acc=0.9)
 
 
+def test_run_eval_every_zero_raises_up_front(rng):
+    """Regression: run(eval_every=0) used to crash mid-loop with a bare
+    ZeroDivisionError from ``round_idx % eval_every``. Validate at call
+    time with an actionable message, before any round runs."""
+    eng = _tiny_engine(rng, FedAvgConfig(C=1.0, E=1, B=8, lr=0.1, seed=0),
+                       eval_fn=lambda p: {"acc": 0.5, "loss": 1.0})
+    for bad in (0, -1):
+        with pytest.raises(ValueError, match="eval_every"):
+            eng.run(3, eval_every=bad)
+    assert eng.round_idx == 0
+
+
 # ---------------------------------------------------------------------------
 # checkpoint / resume
 # ---------------------------------------------------------------------------
@@ -364,10 +376,16 @@ def test_engine_checkpoint_resume_bit_for_bit(rng, tmp_path):
 
     resumed = fresh()
     assert resumed.restore(tmp_path) == 3
+    # restore() also rehydrates the pre-interruption history (it used to
+    # come back empty, losing the first 3 records from every resumed
+    # run's curve), so the FULL histories must now be equal.
+    assert [r.train_loss for r in resumed.history.records] == [
+        r.train_loss for r in h_straight.records[:3]
+    ]
     h_resumed = resumed.run(3)
 
     assert [r.train_loss for r in h_resumed.records] == [
-        r.train_loss for r in h_straight.records[3:]
+        r.train_loss for r in h_straight.records
     ]
     for a, b in zip(jax.tree.leaves(resumed.params),
                     jax.tree.leaves(straight.params)):

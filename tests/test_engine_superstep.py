@@ -150,10 +150,22 @@ def test_superstep_resume_reproduces_uninterrupted_run(rng, tmp_path):
     assert resumed.restore(tmp_path) == 3
     h_resumed = resumed.run(3, rounds_per_step=3)
 
-    assert _losses(h_resumed) == _losses(h_straight)[3:]
+    # full-history equality: restore() rehydrates the first 3 records
+    assert _losses(h_resumed) == _losses(h_straight)
     for a, b in zip(jax.tree.leaves(resumed.params),
                     jax.tree.leaves(straight.params)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_superstep_eval_every_zero_raises_up_front(rng):
+    """S3 regression, superstep lane: eval_every=0 used to reach
+    ``max(1, int(eval_every))`` in rounds_per_step auto-selection and then
+    ZeroDivide in the record loop. Must raise at run() entry."""
+    eng = _engine(np.random.default_rng(3),
+                  eval_fn=lambda p: {"acc": 0.5, "loss": 1.0})
+    with pytest.raises(ValueError, match="eval_every"):
+        eng.run(4, eval_every=0, rounds_per_step=2)
+    assert eng.round_idx == 0
 
 
 def test_restore_rejects_sampling_mode_mismatch(rng, tmp_path):

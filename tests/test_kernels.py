@@ -178,6 +178,7 @@ def _packed_payload(rng, K, N, chunk, bits):
     (33, 16, 4, 4),    # ragged N, 8 codes/word
     (1000, 64, 3, 2),  # ragged N, 16 codes/word
     (250, 30, 2, 3),   # width AND chunk that don't divide the word
+    (100, 16, 2, 12),  # odd WIDE width (9..15 lane), 2 codes/word
 ])
 def test_packed_quantized_aggregate_matches_oracle(rng, K, N, chunk, bc, bits):
     """Acceptance: the fused unpack+dequantize+accumulate kernel ==
@@ -206,9 +207,11 @@ def test_packed_quantized_aggregate_rejects_bad_inputs(rng):
         packed_quantized_aggregate(words, lo, scale, jnp.asarray([1.0, 2.0]),
                                    bits=4, chunk=16, levels=15,
                                    interpret=True)
-    with pytest.raises(ValueError, match="bits in 1..7"):
+    # 16-bit codes are exact uint16 stores through the UNPACKED kernel;
+    # the packed path covers every width 1..15 (odd 9..15 included)
+    with pytest.raises(ValueError, match="bits in 1..15"):
         packed_quantized_aggregate(words, lo, scale, jnp.asarray([0.5, 0.5]),
-                                   bits=8, chunk=16, levels=255,
+                                   bits=16, chunk=16, levels=65535,
                                    interpret=True)
     wpc = words_per_chunk(16, 4)
     with pytest.raises(ValueError, match=f"C\\*{wpc}"):

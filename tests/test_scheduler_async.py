@@ -1,0 +1,345 @@
+"""Event-driven round scheduler: buffered-async + straggler simulation.
+
+The acceptance bars of the scheduler refactor:
+
+- the degenerate schedule (``buffer_k == m``, zero LatencyModel)
+  reproduces the sync lane's model state — params, outer strategy state,
+  and the client-sampling RNG stream — bit-for-bit, round for round
+  (the recorded train-loss metric agrees to 1 ulp; the same reduction is
+  compiled independently in the two executables);
+- one (engine seed, LatencyModel) pair fixes the ENTIRE event schedule:
+  two identical runs produce identical histories, sim clocks, and params;
+- FedAsync staleness discounting rides the ServerStrategy protocol and
+  round-trips through checkpoints;
+- dropout/partial-buffer paths make progress instead of deadlocking.
+"""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    AsyncConfig,
+    FedAvgConfig,
+    LatencyModel,
+    RoundEngine,
+)
+from repro.core.strategies import FedAsync
+
+
+def _clients(rng, sizes=(7, 64, 13, 40, 25, 9, 31, 18, 55, 12, 23, 17),
+             d=20, classes=5):
+    out = []
+    for i, n in enumerate(sizes):
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        y = rng.choice([i % classes, (i + 1) % classes], n).astype(np.int32)
+        out.append((x, y))
+    return out
+
+
+@pytest.fixture
+def setting(rng):
+    from repro.models import mnist_2nn
+
+    clients = _clients(rng)
+    model = mnist_2nn(n_classes=5, d_in=20)
+    params = model.init(jax.random.PRNGKey(0))
+    cfg = FedAvgConfig(C=0.4, E=2, B=10, lr=0.1, seed=3)
+    return model, params, clients, cfg
+
+
+def _params_equal(p1, p2):
+    return all(
+        (np.asarray(a) == np.asarray(b)).all()
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2))
+    )
+
+
+def _snap(store):
+    def ev(p):
+        store.append(
+            np.concatenate(
+                [np.asarray(l).ravel() for l in jax.tree.leaves(p)]
+            ).tobytes()
+        )
+        return {"acc": 0.0, "loss": 0.0}
+
+    return ev
+
+
+# ---------------------------------------------------------------------------
+# degenerate schedule == sync lane
+# ---------------------------------------------------------------------------
+
+def test_degenerate_async_matches_sync_per_round(setting):
+    """K=m + zero latency: params bit-identical after EVERY round, losses
+    to 1 ulp, through one run() call."""
+    model, params, clients, cfg = setting
+    s1, s2 = [], []
+    sync = RoundEngine(model.loss, params, clients, cfg, eval_fn=_snap(s1))
+    h1 = sync.run(5, eval_every=1)
+    m = sync._m
+    asy = RoundEngine(
+        model.loss, params, clients, cfg, eval_fn=_snap(s2),
+        async_config=AsyncConfig(buffer_k=m, concurrency=m),
+        latency=LatencyModel(kind="zero"),
+    )
+    h2 = asy.run(5, eval_every=1)
+    assert s1 == s2  # raw param bytes, every round
+    l1 = [r.train_loss for r in h1.records]
+    l2 = [r.train_loss for r in h2.records]
+    np.testing.assert_allclose(l1, l2, rtol=3e-7)
+    assert [r.round for r in h1.records] == [r.round for r in h2.records]
+
+
+def test_degenerate_async_rng_lockstep_across_run_calls(setting):
+    """Regression: the async loop used to issue a trailing refill dispatch
+    after its last apply, consuming the engine's sampling RNG for a group
+    nobody aggregates — repeated run() calls then diverged from sync."""
+    model, params, clients, cfg = setting
+    sync = RoundEngine(model.loss, params, clients, cfg)
+    m = sync._m
+    asy = RoundEngine(
+        model.loss, params, clients, cfg,
+        async_config=AsyncConfig(buffer_k=m, concurrency=m),
+        latency=LatencyModel(kind="zero"),
+    )
+    for _ in range(4):
+        sync.run(1)
+        asy.run(1)
+        assert (
+            sync.rng.bit_generator.state == asy.rng.bit_generator.state
+        )
+    assert _params_equal(sync.params, asy.params)
+
+
+# ---------------------------------------------------------------------------
+# determinism of the simulated schedule
+# ---------------------------------------------------------------------------
+
+def test_async_run_is_deterministic(setting):
+    model, params, clients, cfg = setting
+    lat = LatencyModel(kind="lognormal", mean_s=1.0, sigma=1.5,
+                       hetero=0.5, dropout=0.3, seed=7)
+
+    def go():
+        eng = RoundEngine(
+            model.loss, params, clients, cfg,
+            strategy=FedAsync(staleness_exp=0.5),
+            async_config=AsyncConfig(buffer_k=2, concurrency=6),
+            latency=lat,
+        )
+        return eng, eng.run(8)
+
+    e1, h1 = go()
+    e2, h2 = go()
+    assert [dataclasses.asdict(r) | {"wall_s": 0.0} for r in h1.records] == \
+           [dataclasses.asdict(r) | {"wall_s": 0.0} for r in h2.records]
+    assert _params_equal(e1.params, e2.params)
+    assert all(np.isfinite(r.train_loss) for r in h1.records)
+    assert all(r.sim_s >= 0 for r in h1.records)
+
+
+def test_sync_latency_lane_is_deterministic_and_times_rounds(setting):
+    model, params, clients, cfg = setting
+    lat = LatencyModel(kind="exponential", mean_s=2.0, hetero=0.3, seed=9)
+
+    def go():
+        eng = RoundEngine(model.loss, params, clients, cfg, latency=lat)
+        return eng, eng.run(4)
+
+    e1, h1 = go()
+    e2, h2 = go()
+    assert [r.sim_s for r in h1.records] == [r.sim_s for r in h2.records]
+    assert all(r.sim_s > 0 for r in h1.records)
+    assert _params_equal(e1.params, e2.params)
+    # the latency stream must NOT perturb the engine's cohort sampling:
+    # a no-latency engine draws the identical client sequence
+    plain = RoundEngine(model.loss, params, clients, cfg)
+    plain.run(4)
+    assert plain.rng.bit_generator.state == e1.rng.bit_generator.state
+
+
+def test_latency_model_never_perturbs_cohort_stream(setting):
+    """Same engine seed, wildly different latency models: identical
+    client-sampling RNG consumption (the losses differ only through
+    dropout masking, never through different cohorts)."""
+    model, params, clients, cfg = setting
+    a = RoundEngine(model.loss, params, clients, cfg,
+                    latency=LatencyModel(kind="zero"))
+    b = RoundEngine(
+        model.loss, params, clients, cfg,
+        latency=LatencyModel(kind="lognormal", sigma=2.0, seed=123),
+    )
+    a.run(3)
+    b.run(3)
+    assert a.rng.bit_generator.state == b.rng.bit_generator.state
+
+
+# ---------------------------------------------------------------------------
+# dropout / partial-buffer progress
+# ---------------------------------------------------------------------------
+
+def test_async_heavy_dropout_still_progresses(setting):
+    model, params, clients, cfg = setting
+    eng = RoundEngine(
+        model.loss, params, clients, cfg,
+        async_config=AsyncConfig(buffer_k=3, concurrency=6),
+        latency=LatencyModel(kind="exponential", mean_s=1.0,
+                             dropout=0.6, seed=1),
+    )
+    h = eng.run(5)
+    assert len(h.records) == 5
+    assert all(np.isfinite(r.train_loss) for r in h.records)
+    assert eng.round_idx == 5
+
+
+def test_sync_latency_all_dropped_round_is_nan_but_advances(setting):
+    """A round whose whole cohort fails produces no update (nan loss) but
+    still advances the clock and the round index."""
+    model, params, clients, cfg = setting
+    eng = RoundEngine(
+        model.loss, params, clients, cfg,
+        latency=LatencyModel(kind="exponential", mean_s=5.0,
+                             deadline_s=1e-9, seed=2),
+    )
+    h = eng.run(3)
+    assert eng.round_idx == 3
+    assert all(np.isnan(r.train_loss) for r in h.records)
+    assert all(0 < r.sim_s <= 1e-9 for r in h.records)
+    assert _params_equal(eng.params, params)  # nothing ever applied
+
+
+def test_async_staleness_reaches_apply(setting):
+    """With K < m and real latency spread, some buffered updates must be
+    stale (computed against older params) — assert the discounting path
+    actually sees nonzero staleness. The stale vector is assembled
+    host-side, so wrapping the apply executable observes concrete values.
+    """
+    model, params, clients, cfg = setting
+    eng = RoundEngine(
+        model.loss, params, clients, cfg,
+        strategy=FedAsync(staleness_exp=0.5),
+        async_config=AsyncConfig(buffer_k=1, concurrency=6),
+        latency=LatencyModel(kind="lognormal", sigma=1.5, seed=4),
+    )
+    seen = []
+    orig = eng._apply_jit
+
+    def spy(params, outer, flat, per_loss, w, stale):
+        seen.append(np.asarray(stale))
+        return orig(params, outer, flat, per_loss, w, stale)
+
+    eng._apply_jit = spy
+    eng.run(10)
+    assert seen and any(s.max() > 0 for s in seen)
+
+
+# ---------------------------------------------------------------------------
+# FedAsync strategy + checkpointing
+# ---------------------------------------------------------------------------
+
+def test_fedasync_staleness_scale_math():
+    import jax.numpy as jnp
+
+    s = FedAsync(staleness_exp=0.5)
+    scale = np.asarray(s.staleness_scale(jnp.asarray([0.0, 3.0, 8.0])))
+    np.testing.assert_allclose(scale, [1.0, 0.5, 1.0 / 3.0], rtol=1e-6)
+    # zero staleness never discounts — required for the degenerate lane
+    assert scale[0] == 1.0
+
+
+def test_fedasync_checkpoint_roundtrip(setting, tmp_path):
+    model, params, clients, cfg = setting
+
+    def mk():
+        return RoundEngine(
+            model.loss, params, clients, cfg,
+            strategy=FedAsync(staleness_exp=0.5, server_lr=0.9),
+            async_config=AsyncConfig(buffer_k=2, concurrency=5),
+            latency=LatencyModel(kind="exponential", mean_s=1.0,
+                                 dropout=0.1, seed=5),
+        )
+
+    a = mk()
+    a.run(4)
+    path = os.path.join(tmp_path, "ck")
+    a.save(path)
+    b = mk()
+    b.restore(path)
+    assert b.round_idx == a.round_idx
+    assert _params_equal(a.params, b.params)
+    assert [dataclasses.asdict(r) for r in b.history.records] == \
+           [dataclasses.asdict(r) for r in a.history.records]
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+def test_async_config_validation():
+    with pytest.raises(ValueError, match="buffer_k"):
+        AsyncConfig(buffer_k=0)
+    with pytest.raises(ValueError, match="never fill"):
+        AsyncConfig(buffer_k=5, concurrency=3)
+
+
+def test_latency_model_validation():
+    with pytest.raises(ValueError, match="kind"):
+        LatencyModel(kind="uniform")
+    with pytest.raises(ValueError, match="dropout"):
+        LatencyModel(dropout=1.0)
+    with pytest.raises(ValueError, match="deadline"):
+        LatencyModel(kind="exponential", deadline_s=0.0)
+    assert LatencyModel().is_zero
+    assert not LatencyModel(dropout=0.5).is_zero
+    assert not LatencyModel(kind="exponential").is_zero
+
+
+def test_async_rejects_incompatible_lanes(setting):
+    from repro.core import quantize_codec
+
+    model, params, clients, cfg = setting
+    with pytest.raises(ValueError, match="async_config"):
+        RoundEngine(model.loss, params, clients, cfg,
+                    codec=quantize_codec(8),
+                    async_config=AsyncConfig(buffer_k=2))
+    with pytest.raises(ValueError, match="concurrency"):
+        eng = RoundEngine(
+            model.loss, params, clients, cfg,
+            async_config=AsyncConfig(buffer_k=2, concurrency=999),
+        )
+        eng.run(1)
+
+
+def test_async_spec_front_door(setting):
+    """AsyncSpec threads through ExperimentSpec → from_spec → scheduler."""
+    from repro.specs import (
+        AsyncSpec,
+        ExperimentSpec,
+        ModelSpec,
+        PartitionSpec,
+    )
+
+    model, params, clients, cfg = setting
+    spec = ExperimentSpec(
+        name="t",
+        model=ModelSpec("mnist_2nn", kwargs={"n_classes": 5, "d_in": 20}),
+        partition=PartitionSpec("iid", n_clients=len(clients)),
+        fedavg=cfg,
+        strategy=FedAsync(staleness_exp=0.5),
+        async_spec=AsyncSpec(
+            buffer_k=2,
+            latency=LatencyModel(kind="exponential", mean_s=1.0, seed=3),
+        ),
+    )
+    spec = ExperimentSpec.from_json(spec.to_json())  # wire round-trip
+    eng = RoundEngine.from_spec(
+        spec, clients, loss_fn=model.loss, init_params=params
+    )
+    h = eng.run(3)
+    assert len(h.records) == 3
+    assert all(np.isfinite(r.train_loss) for r in h.records)
+    assert all(r.sim_s > 0 for r in h.records)

@@ -12,14 +12,9 @@ from __future__ import annotations
 import time
 
 import jax
-import numpy as np
 
-from repro.core import FedAvgConfig, RoundEngine, make_eval_fn
-from repro.data import (
-    make_image_classification,
-    partition_iid,
-    partition_pathological_noniid,
-)
+from repro.core import RoundEngine, make_eval_fn
+from repro.data import make_image_classification
 from repro.models import mnist_2nn, mnist_cnn
 
 

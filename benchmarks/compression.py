@@ -27,8 +27,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit
 from repro.core import FedAvgConfig, RoundEngine, make_eval_fn

@@ -1,8 +1,6 @@
 """Render the roofline table from the dry-run JSON cache (deliverable g)."""
 from __future__ import annotations
 
-import json
-from pathlib import Path
 
 from repro.launch.roofline import load_results, render_table
 
@@ -19,7 +17,6 @@ def wire_path(quick=True):
     """
     import jax
     import jax.numpy as jnp
-    import numpy as np
 
     from repro.core.compression import (
         identity_codec,

@@ -1,6 +1,9 @@
 """Paper Table 2 (LSTM section): char-LSTM on the role-partitioned corpus —
 the unbalanced non-IID setting where the paper saw its largest speedups
 (95x). FedSGD vs FedAvg(E, B) on the natural per-role partition."""
+# fedlint: legacy-seed — pre-RoundEngine seed scaffolding (FederatedTrainer
+# path), still runnable via benchmarks/run.py but unported per ROADMAP;
+# quarantined from the lint surface rather than silently skipped.
 from __future__ import annotations
 
 import time

@@ -3,7 +3,7 @@ FedSGD baseline — the paper's headline 10-100x round reduction. u = E*n/(K*B)
 orders the rows exactly as in the paper."""
 from __future__ import annotations
 
-from repro.core import FedAvgConfig, fedsgd_config
+from repro.core import FedAvgConfig
 from repro.data import partition_iid, partition_pathological_noniid
 
 from benchmarks.common import clients_for, emit, mnist_setting, run_setting

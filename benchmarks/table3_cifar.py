@@ -2,6 +2,9 @@
 FedSGD vs FedAvg rounds-to-target (synthetic 24x24x3 dataset, TF-tutorial
 CNN). Sequential SGD counts each minibatch as one communication round, as in
 the paper's comparison."""
+# fedlint: legacy-seed — pre-RoundEngine seed scaffolding (FederatedTrainer
+# path), still runnable via benchmarks/run.py but unported per ROADMAP;
+# quarantined from the lint surface rather than silently skipped.
 from __future__ import annotations
 
 import time

@@ -2,7 +2,6 @@
 """Sequential dry-run sweep driver: every (arch x shape x mesh), smallest
 archs first, one subprocess per combo (isolates compiler memory, makes
 progress restartable via --skip-existing semantics)."""
-import json
 import subprocess
 import sys
 import time

@@ -14,11 +14,9 @@ Chosen pairs (from the 40-pair baseline table):
   C. gemma-2b x train_4k, single-pod — worst useful-FLOPs fraction (8 heads
      cannot tensor-shard over tp=16; attention computes 16x replicated).
 """
-import json
 import subprocess
 import sys
 import time
-from pathlib import Path
 
 OUT = "results/hillclimb"
 
@@ -53,7 +51,6 @@ def main():
     for step in STEPS:
         if only and not any(step["tag"].startswith(o) for o in only):
             continue
-        path = Path(OUT)
         t0 = time.time()
         cmd = [sys.executable, "-m", "repro.launch.dryrun", "--out", OUT,
                "--tag", step["tag"]] + step["args"]

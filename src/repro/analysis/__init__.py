@@ -1,0 +1,35 @@
+"""fedlint — the repo-specific static-analysis pass.
+
+The reproduction's scarce resources are compile stability, RNG-stream
+discipline, donation safety, and wire honesty (see docs/analysis.md): every
+recent PR fixed a silent bug in exactly one of those classes, and each fix
+was pinned by a hand-written test at the one call site that broke. Nothing
+checked *new* code — this package does. ``python -m repro.analysis src/``
+parses (never imports) the tree and machine-checks the invariants as lint
+rules F1–F6, with per-line suppressions and a JSON output mode for CI.
+
+Layout:
+
+- ``core``          engine: file walking, rule registry, suppressions,
+                    Finding/report types, the ``run_paths`` entry point.
+- ``trace``         shared AST infra: traced-function discovery (jit/vmap/
+                    scan/pallas_call, through partial/alias chains) and the
+                    value-taint walker the trace rules share.
+- ``rules_*``       one module per rule family (see docs/analysis.md).
+- ``reachability``  the import-graph dead-module report (``--dead``).
+- ``guards``        RUNTIME guard rails (retrace_guard, transfer_guard,
+                    tracer-leak lane) — the dynamic twins of the static
+                    rules, used by the slow-lane round-loop tests.
+
+Rules import at the bottom of ``core`` so registration is a side effect of
+importing the package; ``guards`` stays import-light (no jax at module
+import) so the linter itself never touches a device.
+"""
+from repro.analysis.core import (  # noqa: F401
+    Finding,
+    LintReport,
+    RULES,
+    lint_file,
+    lint_source,
+    run_paths,
+)

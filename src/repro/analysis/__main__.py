@@ -1,0 +1,82 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Exit codes: 0 on success (findings are *printed* but only fail the run
+under ``--fail-on-findings``, which is what the CI lint lane passes);
+2 when findings exist and ``--fail-on-findings`` is set; 3 on parse
+errors in the scanned tree (always fatal — an unparsable file is never
+"clean").
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis.core import RULE_DOC, RULES, run_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="fedlint: repo-specific static analysis (rules F1-F6)",
+    )
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable report on stdout")
+    ap.add_argument("--fail-on-findings", action="store_true",
+                    help="exit 2 if any finding survives suppression")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset, e.g. F1,F5")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the registry and exit")
+    ap.add_argument("--dead", action="store_true",
+                    help="also report modules unreachable from any entry "
+                         "point (tests/benchmarks/scripts/launch)")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid in sorted(RULES):
+            print(f"{rid}: {RULE_DOC[rid]}")
+        return 0
+
+    rules = args.rules.split(",") if args.rules else None
+    paths = args.paths or ["src"]
+    report = run_paths(paths, rules=rules)
+
+    if args.json:
+        print(report.to_json())
+    else:
+        print(report.human())
+
+    if args.dead:
+        from repro.analysis.reachability import dead_modules
+
+        repo = Path.cwd()
+        src_root = repo / "src"
+        entry_roots = [repo / d for d in
+                       ("tests", "benchmarks", "scripts", "launch")]
+        dead, dynamic = dead_modules(src_root, entry_roots)
+        print()
+        if dead:
+            print("dead (no entry point imports them):")
+            for m in dead:
+                print(f"  {m}")
+        else:
+            print("dead: none")
+        if dynamic:
+            print("dynamic (reached only via importlib, unprovable):")
+            for m in dynamic:
+                print(f"  {m}")
+
+    if report.parse_errors:
+        for e in report.parse_errors:
+            print(f"parse error: {e}", file=sys.stderr)
+        return 3
+    if report.findings and args.fail_on_findings:
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

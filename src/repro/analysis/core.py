@@ -1,0 +1,233 @@
+"""fedlint engine: rule registry, suppression comments, file walking.
+
+The engine PARSES files (``ast`` module) and never imports them — linting
+a tree can't execute it, so seeded-violation fixtures and half-broken
+work-in-progress files are all safe inputs. Each rule is a function
+``rule(ctx) -> Iterable[Finding]`` over a :class:`ModuleContext` (path,
+source, AST, per-line suppression sets); registration is declarative via
+:func:`register`.
+
+Suppression syntax (docs/analysis.md):
+
+- ``# fedlint: disable=F1`` (or ``=F1,F4`` or ``=all``) on the flagged
+  line, or alone on the line directly above it.
+- ``# fedlint: legacy-seed`` anywhere in a file's first 10 lines marks the
+  whole file as unported seed scaffolding: it is skipped AND reported in
+  the ``skipped`` list, so quarantined code stays visible instead of
+  silently vanishing from the lint surface (the ROADMAP-tracked
+  ``benchmarks/table3_cifar.py`` / ``shakespeare_lstm.py`` pair).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set
+
+__all__ = [
+    "Finding",
+    "LintReport",
+    "ModuleContext",
+    "RULES",
+    "register",
+    "lint_source",
+    "lint_file",
+    "run_paths",
+]
+
+_DISABLE_RE = re.compile(r"#\s*fedlint:\s*disable=([A-Za-z0-9_,\s]+)")
+_DISABLE_FILE_RE = re.compile(r"#\s*fedlint:\s*disable-file=([A-Za-z0-9_,\s]+)")
+_LEGACY_RE = re.compile(r"#\s*fedlint:\s*legacy-seed\b")
+# Directories never linted unless named explicitly: seeded-violation
+# fixtures are lint INPUTS for tests, not part of the checked tree.
+EXCLUDED_DIR_NAMES = ("fixtures", "__pycache__")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str          # family id, e.g. "F2" — the suppression key
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class LintReport:
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    files_scanned: int = 0
+    skipped_legacy: List[str] = dataclasses.field(default_factory=list)
+    parse_errors: List[str] = dataclasses.field(default_factory=list)
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "findings": [f.to_json() for f in self.findings],
+                "files_scanned": self.files_scanned,
+                "skipped_legacy": self.skipped_legacy,
+                "parse_errors": self.parse_errors,
+            },
+            indent=2,
+            sort_keys=True,
+        )
+
+    def human(self) -> str:
+        lines = [f.format() for f in self.findings]
+        lines.append(
+            f"fedlint: {len(self.findings)} finding(s) in "
+            f"{self.files_scanned} file(s)"
+            + (
+                f", {len(self.skipped_legacy)} legacy-seed file(s) skipped"
+                if self.skipped_legacy
+                else ""
+            )
+        )
+        return "\n".join(lines)
+
+
+class ModuleContext:
+    """Everything a rule needs about one module. Rules share the parsed
+    tree and the lazily-built trace index (``repro.analysis.trace``) so the
+    per-file cost stays one parse + one discovery pass however many rules
+    run."""
+
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = path
+        self.source = source
+        self.tree = tree
+        self.lines = source.splitlines()
+        self._suppressed: Dict[int, Set[str]] = {}
+        # whole-file rule opt-outs: `# fedlint: disable-file=F3` in the
+        # first 10 lines (for test files whose idiom a rule rejects)
+        self._file_suppressed: Set[str] = set()
+        for i, line in enumerate(self.lines, start=1):
+            m = _DISABLE_RE.search(line)
+            if m:
+                codes = {c.strip().upper() for c in m.group(1).split(",")}
+                self._suppressed[i] = codes
+            if i <= 10:
+                m = _DISABLE_FILE_RE.search(line)
+                if m:
+                    self._file_suppressed |= {
+                        c.strip().upper() for c in m.group(1).split(",")
+                    }
+        self._trace_index = None  # built on first use
+
+    @property
+    def trace_index(self):
+        if self._trace_index is None:
+            from repro.analysis.trace import TraceIndex
+
+            self._trace_index = TraceIndex(self.tree)
+        return self._trace_index
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        """Suppressed on the line itself, by a directive-only comment on
+        the line directly above (for lines with no room for a trailer), or
+        by a file-level ``disable-file`` header."""
+        if rule.upper() in self._file_suppressed:
+            return True
+        for at in (line, line - 1):
+            codes = self._suppressed.get(at)
+            if codes is None:
+                continue
+            if at == line - 1 and not self.lines[at - 1].strip().startswith("#"):
+                continue  # the directive above must be a standalone comment
+            if "ALL" in codes or rule.upper() in codes:
+                return True
+        return False
+
+
+Rule = Callable[[ModuleContext], Iterable[Finding]]
+RULES: Dict[str, Rule] = {}
+RULE_DOC: Dict[str, str] = {}
+
+
+def register(rule_id: str, doc: str):
+    """Declare a rule family. The decorated function yields Findings whose
+    ``rule`` must equal ``rule_id`` (the suppression key)."""
+
+    def deco(fn: Rule) -> Rule:
+        RULES[rule_id] = fn
+        RULE_DOC[rule_id] = doc
+        return fn
+
+    return deco
+
+
+def is_legacy_seed(source: str) -> bool:
+    head = source.splitlines()[:10]
+    return any(_LEGACY_RE.search(line) for line in head)
+
+
+def lint_source(
+    source: str, path: str = "<string>", rules: Optional[Sequence[str]] = None
+) -> List[Finding]:
+    """Lint one source string; raises SyntaxError on unparsable input."""
+    tree = ast.parse(source, filename=path)
+    ctx = ModuleContext(path, source, tree)
+    out: List[Finding] = []
+    for rid, rule in sorted(RULES.items()):
+        if rules is not None and rid not in rules:
+            continue
+        for f in rule(ctx):
+            if not ctx.suppressed(f.rule, f.line):
+                out.append(f)
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return out
+
+
+def lint_file(path: Path, report: LintReport,
+              rules: Optional[Sequence[str]] = None) -> None:
+    source = path.read_text()
+    if is_legacy_seed(source):
+        report.skipped_legacy.append(str(path))
+        return
+    try:
+        report.findings.extend(lint_source(source, str(path), rules=rules))
+    except SyntaxError as e:
+        report.parse_errors.append(f"{path}: {e}")
+        return
+    report.files_scanned += 1
+
+
+def iter_python_files(paths: Sequence[str]) -> Iterable[Path]:
+    for p in paths:
+        root = Path(p)
+        if root.is_file():
+            yield root
+            continue
+        for f in sorted(root.rglob("*.py")):
+            if any(part in EXCLUDED_DIR_NAMES for part in f.parts):
+                continue
+            yield f
+
+
+def run_paths(paths: Sequence[str],
+              rules: Optional[Sequence[str]] = None) -> LintReport:
+    """Lint every ``*.py`` under ``paths`` (files or directories;
+    ``fixtures/`` directories are skipped unless a file inside one is named
+    explicitly). The CLI front end for this lives in ``__main__``."""
+    report = LintReport()
+    for f in iter_python_files(paths):
+        lint_file(f, report, rules=rules)
+    report.findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return report
+
+
+# Rule registration is an import side effect, kept at the bottom so the
+# modules see a fully-defined core. Order fixes nothing semantic — findings
+# sort by position — but keeps the registry listing stable for docs.
+from repro.analysis import rules_trace  # noqa: E402,F401
+from repro.analysis import rules_rng  # noqa: E402,F401
+from repro.analysis import rules_donation  # noqa: E402,F401
+from repro.analysis import rules_kernel  # noqa: E402,F401
+from repro.analysis import rules_spec  # noqa: E402,F401

@@ -1,0 +1,114 @@
+"""Runtime guard rails — the dynamic twins of the static rules.
+
+Import-light on purpose: jax loads lazily inside each guard, so importing
+``repro.analysis`` (the linter) never touches a device.
+
+- :func:`retrace_guard` — generalizes the ``num_compilations <= 2`` test:
+  assert a region compiles at most ``max_new`` new executables.
+- :func:`transfer_guard` — wraps ``jax.transfer_guard``. What it can
+  enforce is backend-dependent and worth being honest about: on CPU the
+  device buffer *is* host memory, so device→host reads (``float(loss)``,
+  ``np.asarray``) are zero-copy and never guarded — but host→device
+  staging IS enforced, which is the direction that silently creeps into
+  round loops (a python-float lr, a numpy cohort array, a fresh PRNGKey
+  re-staged every round). On TPU the same guard additionally catches
+  implicit D2H syncs.
+- :func:`sanctioned_staging` — the engine's marker for its *deliberate*
+  host→device staging points (per-round lr scalar, host-sampled cohorts,
+  superstep lr schedules). Inside the block transfers are allowed; the
+  point is that every such block is grep-able and everything outside one
+  runs under the caller's ambient guard.
+- tracer-leak lane: ``REPRO_CHECK_TRACER_LEAKS=1`` makes ``tests/``
+  enable ``jax_check_tracer_leaks`` for the whole session (see
+  ``tests/conftest.py``); :func:`tracer_leak_checks` is the scoped form.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Callable, Union
+
+__all__ = [
+    "RetraceError",
+    "retrace_guard",
+    "transfer_guard",
+    "sanctioned_staging",
+    "tracer_leak_checks",
+    "tracer_leak_lane_enabled",
+]
+
+
+class RetraceError(AssertionError):
+    """A guarded region compiled more executables than its budget."""
+
+
+def _cache_size(jitted) -> int:
+    return jitted._cache_size()
+
+
+@contextlib.contextmanager
+def retrace_guard(
+    counter: Union[Callable[[], int], object],
+    max_new: int = 0,
+    what: str = "guarded region",
+):
+    """Assert the region compiles at most ``max_new`` NEW executables.
+
+    ``counter`` is either a zero-arg callable returning a compile count
+    (e.g. ``lambda: engine.num_compilations``) or a jitted function
+    (its ``_cache_size()`` is used). ``max_new=0`` is the steady-state
+    contract: a warmed loop must never retrace.
+
+        eng.run(2)  # warm-up: first trace is legitimate
+        with retrace_guard(lambda: eng.num_compilations):
+            eng.run(20)
+    """
+    get = counter if callable(counter) and not hasattr(counter, "_cache_size") \
+        else (lambda: _cache_size(counter))
+    before = get()
+    yield
+    after = get()
+    if after - before > max_new:
+        raise RetraceError(
+            f"{what}: {after - before} new compilation(s) "
+            f"(budget {max_new}; {before} -> {after}) — a shape, dtype, or "
+            "static argument is varying per call (rule F3's runtime twin)"
+        )
+
+
+@contextlib.contextmanager
+def transfer_guard(mode: str = "disallow"):
+    """Scoped ``jax.transfer_guard``. ``"disallow"`` (default) blocks
+    *implicit* transfers while explicit ``jax.device_put``/``device_get``
+    — and :func:`sanctioned_staging` blocks — still work; that is the
+    round-loop contract the slow-lane tests pin."""
+    import jax
+
+    with jax.transfer_guard(mode):
+        yield
+
+
+@contextlib.contextmanager
+def sanctioned_staging():
+    """Mark a deliberate host<->device staging point (and allow it even
+    under an ambient :func:`transfer_guard`). Keep these blocks tiny: the
+    guard proves there are no transfers *outside* them."""
+    import jax
+
+    with jax.transfer_guard("allow"):
+        yield
+
+
+def tracer_leak_lane_enabled() -> bool:
+    return os.environ.get("REPRO_CHECK_TRACER_LEAKS", "") not in ("", "0")
+
+
+@contextlib.contextmanager
+def tracer_leak_checks():
+    """Scoped ``jax_check_tracer_leaks`` — catches traced values escaping
+    their trace (rule F1's runtime twin). Noticeably slows tracing; opt-in
+    via the env lane rather than always-on."""
+    import jax
+
+    with jax.checking_leaks():
+        yield

@@ -1,0 +1,159 @@
+"""Import-graph reachability: find seed modules no entry point reaches.
+
+Builds a static import graph over a package tree (``import x``,
+``from x import y``, including relative imports) and walks it from the
+entry-point set — by default every ``tests/``, ``benchmarks/``,
+``scripts/``, and ``launch/`` file plus the package ``__init__``/
+``__main__`` modules. Whatever is never visited is dead-by-imports.
+
+Known blind spot, by design: ``repro.configs.__init__`` loads config
+modules with ``importlib.import_module(f"repro.configs.{name}")`` — a
+dynamic edge no static pass sees. Any module whose *package* ``__init__``
+contains an ``importlib.import_module`` call is therefore reported as
+"dynamic (unprovable)", not "dead".
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Set, Tuple
+
+__all__ = ["dead_modules", "build_graph"]
+
+
+def _module_name(root: Path, f: Path) -> str:
+    rel = f.relative_to(root).with_suffix("")
+    parts = list(rel.parts)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _imports_of(tree: ast.Module, mod: str) -> Set[str]:
+    out: Set[str] = set()
+    pkg_parts = mod.split(".")
+    for n in ast.walk(tree):
+        if isinstance(n, ast.Import):
+            for a in n.names:
+                out.add(a.name)
+        elif isinstance(n, ast.ImportFrom):
+            if n.level:
+                base = pkg_parts[: len(pkg_parts) - n.level + 1]
+                # relative to the containing package of `mod`
+                base = pkg_parts[: -n.level] if n.level <= len(pkg_parts) else []
+                prefix = ".".join(base + ([n.module] if n.module else []))
+            else:
+                prefix = n.module or ""
+            if prefix:
+                out.add(prefix)
+                for a in n.names:
+                    out.add(f"{prefix}.{a.name}")
+    return out
+
+
+def build_graph(
+    src_root: Path,
+) -> Tuple[Dict[str, Path], Dict[str, Set[str]], Set[str]]:
+    """Returns (module -> file, module -> imported modules, dynamic pkgs)."""
+    files: Dict[str, Path] = {}
+    for f in sorted(src_root.rglob("*.py")):
+        if "__pycache__" in f.parts:
+            continue
+        files[_module_name(src_root, f)] = f
+    edges: Dict[str, Set[str]] = {}
+    dynamic_pkgs: Set[str] = set()
+    for mod, f in files.items():
+        try:
+            tree = ast.parse(f.read_text(), filename=str(f))
+        except SyntaxError:
+            edges[mod] = set()
+            continue
+        imported = _imports_of(tree, mod)
+        # keep only edges that resolve inside the tree (prefix match so
+        # `import repro.core.engine as e` hits both the pkg and the module)
+        local = set()
+        for name in imported:
+            parts = name.split(".")
+            for i in range(len(parts), 0, -1):
+                cand = ".".join(parts[:i])
+                if cand in files:
+                    local.add(cand)
+                    break
+        edges[mod] = local
+        if f.name == "__init__.py" and any(
+            isinstance(n, ast.Call)
+            and isinstance(n.func, ast.Attribute)
+            and n.func.attr == "import_module"
+            for n in ast.walk(tree)
+        ):
+            dynamic_pkgs.add(mod)
+    return files, edges, dynamic_pkgs
+
+
+def dead_modules(
+    src_root: Path, entry_roots: List[Path]
+) -> Tuple[List[str], List[str]]:
+    """(dead, dynamic-unprovable) module names under ``src_root``, walking
+    from every import made by files under ``entry_roots`` plus package
+    ``__main__`` modules."""
+    files, edges, dynamic_pkgs = build_graph(src_root)
+
+    seeds: Set[str] = {m for m in files if m.endswith("__main__") or m == ""}
+    # A module with a `if __name__ == "__main__":` guard is a `python -m`
+    # entry point in its own right (the launch drivers are invoked that
+    # way, often via subprocess strings no import graph can see).
+    for mod, f in files.items():
+        try:
+            if '__name__ == "__main__"' in f.read_text() or \
+                    "__name__ == '__main__'" in f.read_text():
+                seeds.add(mod)
+        except OSError:
+            pass
+    for root in entry_roots:
+        if not root.exists():
+            continue
+        for f in sorted(root.rglob("*.py")):
+            if "__pycache__" in f.parts:
+                continue
+            try:
+                tree = ast.parse(f.read_text())
+            except SyntaxError:
+                continue
+            for name in _imports_of(tree, f.stem):
+                parts = name.split(".")
+                for i in range(len(parts), 0, -1):
+                    cand = ".".join(parts[:i])
+                    if cand in files:
+                        seeds.add(cand)
+                        break
+
+    # A visited package implicitly runs its __init__, which imports more;
+    # a visited module also marks its parent packages (import machinery
+    # executes them).
+    visited: Set[str] = set()
+    stack = sorted(seeds)
+    while stack:
+        mod = stack.pop()
+        if mod in visited or mod not in files:
+            continue
+        visited.add(mod)
+        for parent in _parents(mod):
+            if parent in files and parent not in visited:
+                stack.append(parent)
+        stack.extend(edges.get(mod, ()))
+
+    dynamic: List[str] = []
+    dead: List[str] = []
+    for mod in sorted(files):
+        if mod in visited:
+            continue
+        if any(p in dynamic_pkgs for p in _parents(mod) | {mod}):
+            dynamic.append(mod)
+        else:
+            dead.append(mod)
+    return dead, dynamic
+
+
+def _parents(mod: str) -> Set[str]:
+    parts = mod.split(".")
+    return {".".join(parts[:i]) for i in range(1, len(parts))}

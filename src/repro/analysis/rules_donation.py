@@ -1,0 +1,174 @@
+"""F4 — donation safety (the PR 4 deep-copy bug class).
+
+``jax.jit(..., donate_argnums=...)`` hands the argument buffers to XLA:
+after the call the donated arrays are *deleted* — touching one raises
+``RuntimeError: Array has been deleted`` on real backends and, worse,
+can silently alias on others. PR 4's superstep lane hit exactly this:
+``self.params`` went through a donating executable and a later read in
+the same method observed the dead buffer.
+
+The pass:
+
+1. collects donating executables — ``X = jax.jit(f, donate_argnums=(0, 1))``
+   where ``X`` is a plain or dotted name (``self._round_jit``), plus
+   inline ``jax.jit(f, donate_argnums=...)(args)``;
+2. per function, statement-ordered: a call to a donating executable kills
+   the dotted names passed at donated positions, *unless* the same
+   statement's assignment targets rebind them (the engine idiom
+   ``self.params, ... = self._round_jit(self.params, ...)``);
+3. any later Load of a dead name is a finding; any assignment revives it.
+   Loop bodies are walked twice so a donate-then-read-next-iteration slips
+   through only if the loop rebinds.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.core import Finding, ModuleContext, register
+from repro.analysis.trace import call_name
+from repro.analysis.rules_rng import _dotted, _target_names
+
+
+def _donated_positions(jit_call: ast.Call) -> Optional[Tuple[int, ...]]:
+    for kw in jit_call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)):
+            out = []
+            for e in v.elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                    out.append(e.value)
+                else:
+                    return None  # dynamic positions: stay silent
+            return tuple(out)
+        return None
+    return None
+
+
+def _collect_donators(tree: ast.Module) -> Dict[str, Tuple[int, ...]]:
+    out: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        v = node.value
+        if isinstance(v, ast.Call) and call_name(v) == "jit":
+            pos = _donated_positions(v)
+            if pos:
+                name = _dotted(node.targets[0])
+                if name:
+                    out[name] = pos
+    return out
+
+
+class _FnDonation:
+    def __init__(self, ctx: ModuleContext, fn_node,
+                 donators: Dict[str, Tuple[int, ...]]):
+        self.ctx = ctx
+        self.donators = donators
+        self.findings: Dict[Tuple[int, str], Finding] = {}
+        # dead name -> (donating call line, executable name)
+        self.dead: Dict[str, Tuple[int, str]] = {}
+        self._walk(fn_node.body)
+
+    def _add(self, line: int, col: int, name: str, died_at: int, exe: str):
+        key = (line, name)
+        if key not in self.findings:
+            self.findings[key] = Finding(
+                "F4", self.ctx.path, line, col,
+                f"`{name}` read after being donated to `{exe}` at line "
+                f"{died_at} (donate_argnums) — the buffer is deleted by "
+                "the call; rebind the result or pass a copy",
+            )
+
+    # ---- per-statement ----------------------------------------------------
+
+    def _donating_call(self, expr: ast.AST) -> Iterator[ast.Call]:
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Call):
+                callee = _dotted(n.func)
+                if callee in self.donators:
+                    yield n
+
+    def _check_reads(self, expr: ast.AST):
+        if not self.dead:
+            return
+        for n in ast.walk(expr):
+            if isinstance(n, (ast.Name, ast.Attribute)) and isinstance(
+                getattr(n, "ctx", None), ast.Load
+            ):
+                d = _dotted(n)
+                if d in self.dead:
+                    died_at, exe = self.dead[d]
+                    self._add(n.lineno, n.col_offset, d, died_at, exe)
+
+    def _apply_donation(self, call: ast.Call, rebound: Set[str]):
+        exe = _dotted(call.func) or "<jit>"
+        for pos in self.donators.get(exe, ()):
+            if pos < len(call.args):
+                name = _dotted(call.args[pos])
+                if name and name not in rebound:
+                    self.dead[name] = (call.lineno, exe)
+
+    def _walk(self, body):
+        for stmt in body:
+            self._stmt(stmt)
+
+    def _stmt(self, stmt: ast.stmt):
+        if isinstance(
+            stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+        ):
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            self._walk(stmt.body)
+            self._walk(stmt.body)  # second pass: cross-iteration reads
+            self._walk(stmt.orelse)
+            return
+        if isinstance(stmt, ast.If):
+            pre = dict(self.dead)
+            self._walk(stmt.body)
+            post_body = self.dead
+            self.dead = dict(pre)
+            self._walk(stmt.orelse)
+            # A name dead on either path is reported on later reads: death
+            # is the dangerous direction, so merge by union.
+            self.dead = {**post_body, **self.dead}
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            self._walk(stmt.body)
+            return
+        if isinstance(stmt, ast.Try):
+            self._walk(stmt.body)
+            for h in stmt.handlers:
+                self._walk(h.body)
+            self._walk(stmt.orelse)
+            self._walk(stmt.finalbody)
+            return
+
+        # Generic statement: reads first (call args are evaluated before
+        # the call kills anything, so check reads, then apply donations,
+        # then rebind targets).
+        self._check_reads(stmt)
+        targets: List[ast.AST] = []
+        if isinstance(stmt, ast.Assign):
+            targets = stmt.targets
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            targets = [stmt.target]
+        rebound = {n for t in targets for n in _target_names(t)}
+        for call in self._donating_call(stmt):
+            self._apply_donation(call, rebound)
+        for n in rebound:
+            self.dead.pop(n, None)
+
+
+@register("F4", "donation safety: reads after donate_argnums calls")
+def f4_donation(ctx: ModuleContext) -> Iterator[Finding]:
+    donators = _collect_donators(ctx.tree)
+    if not donators:
+        return
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield from _FnDonation(ctx, node, donators).findings.values()

@@ -1,0 +1,150 @@
+"""F5 — Pallas kernel contracts.
+
+Two contracts every kernel in ``kernels/`` already honors (and new ones
+must keep honoring):
+
+- **Accumulation dtype**: any matmul-shaped op inside a kernel body
+  (``@``, ``jnp.dot``/``matmul``/``einsum``, ``lax.dot_general``,
+  ``pl.dot``) must pass ``preferred_element_type`` — on TPU the MXU
+  otherwise accumulates at the input precision, and a bf16/fp16 kernel
+  silently loses the fp32 partials the aggregation math assumes. A
+  kernel body is any function the trace index saw flow into
+  ``pl.pallas_call`` (directly, via partial, or via alias).
+
+- **Grid coverage**: a ``grid=`` entry computed with plain floor division
+  ``N // b`` undercovers ragged ``N``. Accepted as guarded: ``pl.cdiv``,
+  the explicit ceil idiom ``(N + b - 1) // b``, or a visible guard in the
+  enclosing function — ``assert ... % ... == 0`` or the repo's pad idiom
+  ``(-N) % b``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional
+
+from repro.analysis.core import Finding, ModuleContext, register
+from repro.analysis.trace import call_name
+
+_MATMUL_CALLS = {"dot", "matmul", "einsum", "dot_general"}
+
+
+def _has_pet(node: ast.Call) -> bool:
+    return any(kw.arg == "preferred_element_type" for kw in node.keywords)
+
+
+def _kernel_fns(ctx: ModuleContext):
+    for fn in ctx.trace_index.traced:
+        if "pallas_call" in fn.reason:
+            yield fn
+
+
+def _accum_findings(ctx: ModuleContext) -> Iterator[Finding]:
+    seen = set()
+    for fn in _kernel_fns(ctx):
+        name = getattr(fn.node, "name", "<lambda>")
+        for node in ast.walk(fn.node):
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ast.MatMult):
+                key = (node.lineno, node.col_offset)
+                if key in seen:
+                    continue
+                seen.add(key)
+                yield Finding(
+                    "F5", ctx.path, node.lineno, node.col_offset,
+                    f"`@` matmul in kernel body `{name}` has no "
+                    "accumulation dtype — use lax.dot_general(..., "
+                    "preferred_element_type=...) so the MXU accumulates "
+                    "in fp32",
+                )
+            elif isinstance(node, ast.Call) and call_name(node) in _MATMUL_CALLS:
+                if _has_pet(node):
+                    continue
+                key = (node.lineno, node.col_offset)
+                if key in seen:
+                    continue
+                seen.add(key)
+                yield Finding(
+                    "F5", ctx.path, node.lineno, node.col_offset,
+                    f"{call_name(node)}(...) in kernel body `{name}` "
+                    "lacks preferred_element_type — accumulation falls "
+                    "back to input precision on the MXU",
+                )
+
+
+# ---------------------------------------------------------------------------
+# Grid coverage
+# ---------------------------------------------------------------------------
+
+
+def _is_ceil_div(node: ast.BinOp) -> bool:
+    """(N + b - 1) // b   (loosely: LHS is an Add/Sub chain, i.e. adjusted)."""
+    lhs = node.left
+    return isinstance(lhs, ast.BinOp) and isinstance(lhs.op, (ast.Add, ast.Sub))
+
+
+def _fn_has_guard(fn_node: Optional[ast.AST]) -> bool:
+    if fn_node is None:
+        return False
+    for n in ast.walk(fn_node):
+        if isinstance(n, ast.Assert):
+            if any(
+                isinstance(c, ast.BinOp) and isinstance(c.op, ast.Mod)
+                for c in ast.walk(n.test)
+            ):
+                return True
+        if (
+            isinstance(n, ast.BinOp)
+            and isinstance(n.op, ast.Mod)
+            and isinstance(n.left, ast.UnaryOp)
+            and isinstance(n.left.op, ast.USub)
+        ):
+            return True  # (-N) % b pad idiom
+    return False
+
+
+class _GridWalker(ast.NodeVisitor):
+    def __init__(self, ctx: ModuleContext):
+        self.ctx = ctx
+        self.findings: List[Finding] = []
+        self._fn_stack: List[ast.AST] = []
+
+    def visit_FunctionDef(self, node):
+        self._fn_stack.append(node)
+        self.generic_visit(node)
+        self._fn_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def _check_grid_expr(self, expr: ast.AST):
+        elems = expr.elts if isinstance(expr, (ast.Tuple, ast.List)) else [expr]
+        for e in elems:
+            for n in ast.walk(e):
+                if (
+                    isinstance(n, ast.BinOp)
+                    and isinstance(n.op, ast.FloorDiv)
+                    and not _is_ceil_div(n)
+                ):
+                    fn = self._fn_stack[-1] if self._fn_stack else None
+                    if _fn_has_guard(fn):
+                        continue
+                    self.findings.append(Finding(
+                        "F5", self.ctx.path, n.lineno, n.col_offset,
+                        "grid uses plain `//` — undercovers ragged N; use "
+                        "pl.cdiv, (N + b - 1) // b, pad with (-N) % b, or "
+                        "assert N % b == 0",
+                    ))
+
+    def visit_Call(self, node: ast.Call):
+        if call_name(node) in ("pallas_call", "GridSpec", "BlockSpec",
+                               "PrefetchScalarGridSpec"):
+            for kw in node.keywords:
+                if kw.arg == "grid":
+                    self._check_grid_expr(kw.value)
+        self.generic_visit(node)
+
+
+@register("F5", "kernel contracts: accumulation dtype, grid coverage")
+def f5_kernel(ctx: ModuleContext) -> Iterator[Finding]:
+    yield from _accum_findings(ctx)
+    w = _GridWalker(ctx)
+    w.visit(ctx.tree)
+    yield from w.findings

@@ -1,0 +1,255 @@
+"""F2 — RNG-stream discipline (the PR 7 trailing-refill bug class).
+
+Two failure modes on ``jax.random`` keys, both of which corrupt the
+stream silently (losses still go down, results just stop being the
+reproducible stream the seed promises):
+
+- **Discarded derivations**: a ``jax.random.split``/``fold_in`` result
+  (or an element of its tuple unpacking) that is never read afterwards.
+  The PR 7 bug was exactly this shape — a refill path split keys for the
+  trailing partial group and then dropped them, so the trailing clients
+  reused the previous group's keys.
+- **Key reuse**: the same key name passed to two *consuming* calls
+  (samplers or ``split``) with no rebinding in between — two consumers of
+  one key produce correlated draws. ``fold_in`` is exempt as a consumer
+  trigger: deriving several child keys from one parent with distinct data
+  is the documented-safe pattern.
+
+The pass is per-function, statement-ordered, and tracks dotted names
+(``self.sample_key`` counts), so the engine idiom
+``k_a, k_b, k_next = split(self.sample_key, 3); self.sample_key = k_next``
+is recognized as clean. Loop bodies are walked twice so a key consumed in
+an iteration without being rebound before the next one is caught.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.core import Finding, ModuleContext, register
+from repro.analysis.trace import call_name
+
+# jax.random callables that CONSUME the key they are given.
+_CONSUMERS = {
+    "split", "normal", "uniform", "bernoulli", "permutation", "choice",
+    "categorical", "randint", "gumbel", "laplace", "exponential",
+    "truncated_normal", "bits", "poisson", "dirichlet", "beta", "gamma",
+    "shuffle", "ball", "cauchy", "logistic", "multivariate_normal",
+    "orthogonal", "rademacher", "rayleigh", "t", "weibull_min",
+}
+_DERIVERS = {"split", "fold_in"}
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """`a`, `a.b.c` -> dotted string; anything else -> None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_random_call(node: ast.Call, names: Set[str]) -> bool:
+    """Callee tail is in `names` AND the qualifier says jax.random — not a
+    numpy ``Generator`` (``rng.permutation(n)``) or ``np.random``, whose
+    method names collide but whose first arg is not a key."""
+    tail = call_name(node)
+    if tail not in names:
+        return False
+    f = node.func
+    if isinstance(f, ast.Name):
+        # bare call: only the unambiguous derivation names (covers
+        # `from jax.random import split, fold_in`)
+        return tail in ("split", "fold_in")
+    owner = f.value
+    if isinstance(owner, ast.Name):
+        # `random.split` via `from jax import random`, or the jr alias
+        return owner.id in ("random", "jr", "jrandom")
+    if isinstance(owner, ast.Attribute) and owner.attr == "random":
+        base = owner.value
+        # jax.random.* yes; np.random / numpy.random no
+        return isinstance(base, ast.Name) and base.id == "jax"
+    return False
+
+
+def _key_arg(node: ast.Call) -> Optional[str]:
+    if node.args:
+        return _dotted(node.args[0])
+    for kw in node.keywords:
+        if kw.arg == "key":
+            return _dotted(kw.value)
+    return None
+
+
+def _target_names(t: ast.AST) -> Iterator[str]:
+    if isinstance(t, (ast.Name, ast.Attribute)):
+        d = _dotted(t)
+        if d:
+            yield d
+    elif isinstance(t, (ast.Tuple, ast.List)):
+        for e in t.elts:
+            yield from _target_names(e)
+    elif isinstance(t, ast.Starred):
+        yield from _target_names(t.value)
+
+
+class _FnRNG:
+    """Statement-ordered pass over one function body."""
+
+    def __init__(self, ctx: ModuleContext, fn_node):
+        self.ctx = ctx
+        self.fn = fn_node
+        self.findings: Dict[Tuple[int, str], Finding] = {}
+        # key name -> line of the unconsumed-since consuming use
+        self.consumed_at: Dict[str, int] = {}
+        # names assigned from split/fold_in: (name, line) awaiting a read
+        self.derived_unread: Dict[str, int] = {}
+        self.reads: Set[str] = set()
+        self._walk(fn_node.body)
+        self._walk_reads_only(fn_node)
+        for name, line in sorted(self.derived_unread.items(),
+                                 key=lambda kv: kv[1]):
+            if name not in self.reads and not name.startswith("_"):
+                self._add(line, name, (
+                    f"`{name}` from jax.random.split/fold_in is never "
+                    "used — a derived key dropped on the floor desyncs "
+                    "the stream (PR 7 trailing-refill class); thread it "
+                    "or name it `_`"
+                ))
+
+    def _add(self, line: int, name: str, msg: str):
+        key = (line, name)
+        if key not in self.findings:
+            self.findings[key] = Finding("F2", self.ctx.path, line, 0, msg)
+
+    # ---- reads ------------------------------------------------------------
+
+    def _walk_reads_only(self, root):
+        for n in ast.walk(root):
+            if isinstance(n, (ast.Name, ast.Attribute)) and isinstance(
+                getattr(n, "ctx", None), ast.Load
+            ):
+                d = _dotted(n)
+                if d:
+                    self.reads.add(d)
+
+    # ---- statement walk ---------------------------------------------------
+
+    def _walk(self, body):
+        for stmt in body:
+            self._stmt(stmt)
+
+    def _consume(self, call: ast.Call):
+        key = _key_arg(call)
+        if key is None:
+            return
+        prev = self.consumed_at.get(key)
+        if prev is not None:
+            self._add(call.lineno, key, (
+                f"key `{key}` consumed again (previous consuming use at "
+                f"line {prev}) without rebinding — two consumers of one "
+                "key correlate their draws; split first or fold_in with "
+                "distinct data"
+            ))
+        else:
+            self.consumed_at[key] = call.lineno
+
+    def _scan_expr(self, expr: ast.AST):
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Call) and _is_random_call(n, _CONSUMERS):
+                self._consume(n)
+
+    def _rebind(self, name: str):
+        self.consumed_at.pop(name, None)
+
+    def _stmt(self, stmt: ast.stmt):
+        if isinstance(
+            stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+        ):
+            return  # nested scopes run their own pass
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Call):
+            call = stmt.value
+            if _is_random_call(call, _DERIVERS):
+                self._add(call.lineno, call_name(call), (
+                    f"jax.random.{call_name(call)} result discarded — the "
+                    "derived key(s) vanish and the parent stays live; "
+                    "assign and thread the result"
+                ))
+            self._scan_expr(stmt.value)
+            return
+        if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            value = stmt.value
+            if value is not None:
+                self._scan_expr(value)
+            targets = (
+                stmt.targets if isinstance(stmt, ast.Assign) else [stmt.target]
+            )
+            names = [n for t in targets for n in _target_names(t)]
+            for n in names:
+                self._rebind(n)
+            if (
+                value is not None
+                and isinstance(value, ast.Call)
+                and _is_random_call(value, _DERIVERS)
+            ):
+                for n in names:
+                    self.derived_unread.setdefault(n, stmt.lineno)
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            if isinstance(stmt, ast.While):
+                self._scan_expr(stmt.test)
+            else:
+                self._scan_expr(stmt.iter)
+            # Twice: catches keys consumed in iteration i and not rebound
+            # before iteration i+1.
+            self._walk(stmt.body)
+            self._walk(stmt.body)
+            self._walk(stmt.orelse)
+            return
+        if isinstance(stmt, ast.If):
+            self._scan_expr(stmt.test)
+            # Branches are alternatives: give each branch the pre-state,
+            # then merge conservatively (union of consumed sets would
+            # false-positive across exclusive branches; intersection keeps
+            # only keys consumed on every path).
+            pre = dict(self.consumed_at)
+            self._walk(stmt.body)
+            post_body = dict(self.consumed_at)
+            self.consumed_at = dict(pre)
+            self._walk(stmt.orelse)
+            post_else = self.consumed_at
+            self.consumed_at = {
+                k: post_body[k]
+                for k in post_body
+                if k in post_else
+            }
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._scan_expr(item.context_expr)
+            self._walk(stmt.body)
+            return
+        if isinstance(stmt, ast.Try):
+            self._walk(stmt.body)
+            for h in stmt.handlers:
+                self._walk(h.body)
+            self._walk(stmt.orelse)
+            self._walk(stmt.finalbody)
+            return
+        if isinstance(stmt, ast.Return) and stmt.value is not None:
+            self._scan_expr(stmt.value)
+            return
+        for n in ast.walk(stmt):
+            if isinstance(n, ast.Call) and _is_random_call(n, _CONSUMERS):
+                self._consume(n)
+
+
+@register("F2", "RNG discipline: discarded split results, key reuse")
+def f2_rng(ctx: ModuleContext) -> Iterator[Finding]:
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            pass_ = _FnRNG(ctx, node)
+            yield from pass_.findings.values()

@@ -1,0 +1,101 @@
+"""F6 — spec purity on frozen dataclasses.
+
+``ExperimentSpec`` and friends promise a JSON round trip (PR 5): a spec
+that can't serialize can't be checkpointed, diffed, or rehydrated, and a
+mutable default on a frozen class is shared across every instance (the
+classic dataclass footgun — ``@dataclass`` catches ``list``/``dict``/
+``set`` literals, but not mutable instances of user classes or numpy
+arrays).
+
+Checked per field of every ``@dataclass(frozen=True)`` class:
+
+- default is a mutable literal or mutable-constructor call (``[]``,
+  ``{}``, ``set()``, ``np.zeros(...)``, ...) — use
+  ``field(default_factory=...)``;
+- annotation is a known non-JSON type: ``Callable`` (functions don't
+  serialize) or array types (``np.ndarray``/``jnp.ndarray``/``Array``).
+  Frozen-dataclass-valued defaults (``strategy: ServerStrategy =
+  FedAvg()``) are fine — they nest-serialize — and ``NamedTuple``-based
+  codecs are out of scope (they are runtime plumbing, not specs).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.core import Finding, ModuleContext, register
+from repro.analysis.trace import call_name
+
+_MUTABLE_CTORS = {"list", "dict", "set", "bytearray", "zeros", "ones",
+                  "empty", "array", "arange"}
+_NON_JSON_ANN_TAILS = {"Callable", "ndarray", "Array", "DeviceArray"}
+
+
+def _is_frozen_dataclass(node: ast.ClassDef) -> bool:
+    for dec in node.decorator_list:
+        if isinstance(dec, ast.Call) and call_name(dec) == "dataclass":
+            for kw in dec.keywords:
+                if (
+                    kw.arg == "frozen"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True
+                ):
+                    return True
+    return False
+
+
+def _mutable_default(default: ast.AST) -> Optional[str]:
+    if isinstance(default, (ast.List, ast.Dict, ast.Set)):
+        return "mutable literal"
+    if isinstance(default, ast.Call):
+        cn = call_name(default)
+        if cn in _MUTABLE_CTORS:
+            return f"mutable `{cn}(...)` instance"
+        if cn == "field":
+            for kw in default.keywords:
+                if kw.arg == "default" and _mutable_default(kw.value):
+                    return "mutable field(default=...)"
+    return None
+
+
+def _ann_tails(ann: ast.AST) -> Iterator[str]:
+    for n in ast.walk(ann):
+        if isinstance(n, ast.Attribute):
+            yield n.attr
+        elif isinstance(n, ast.Name):
+            yield n.id
+        elif isinstance(n, ast.Constant) and isinstance(n.value, str):
+            # string annotations: cheap substring scan
+            for tail in _NON_JSON_ANN_TAILS:
+                if tail in n.value:
+                    yield tail
+
+
+@register("F6", "spec purity: mutable defaults / non-JSON fields on frozen specs")
+def f6_spec(ctx: ModuleContext) -> Iterator[Finding]:
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.ClassDef) and _is_frozen_dataclass(node)):
+            continue
+        for stmt in node.body:
+            if not isinstance(stmt, ast.AnnAssign):
+                continue
+            fname = (
+                stmt.target.id if isinstance(stmt.target, ast.Name) else "?"
+            )
+            if stmt.value is not None:
+                why = _mutable_default(stmt.value)
+                if why:
+                    yield Finding(
+                        "F6", ctx.path, stmt.lineno, stmt.col_offset,
+                        f"frozen spec `{node.name}.{fname}` has a {why} as "
+                        "default — shared across instances; use "
+                        "field(default_factory=...)",
+                    )
+            bad = set(_ann_tails(stmt.annotation)) & _NON_JSON_ANN_TAILS
+            if bad:
+                yield Finding(
+                    "F6", ctx.path, stmt.lineno, stmt.col_offset,
+                    f"frozen spec `{node.name}.{fname}` is typed "
+                    f"{'/'.join(sorted(bad))} — not JSON-round-trippable; "
+                    "store a registry key or a nested frozen spec instead",
+                )

@@ -1,0 +1,237 @@
+"""F1 (tracer safety) and F3 (retrace hazards).
+
+F1 — concretizing ops on traced values. Inside any function the
+:class:`~repro.analysis.trace.TraceIndex` marks as traced (jit/vmap/scan/
+pallas_call/... target), flag Python control flow (``if``/``while``/
+ternary tests) and host conversions (``float``/``int``/``bool``/
+``.item()``/``np.asarray``/``np.array``) applied to values tainted by the
+traced parameters. These raise ``TracerError`` at trace time in the best
+case and silently bake in a compile-time constant in the worst (when the
+value is concrete on the first call and traced later). The repo's
+sanctioned escape hatch — ``if not isinstance(x, jax.core.Tracer):`` —
+is recognized and makes ``x`` concrete inside the guarded block.
+
+F3 — compile-cache discipline (the ``num_compilations <= 2`` invariant,
+pinned since PR 1). Three hazards, all of which have bitten similar JAX
+round-loop code even when every individual call looks innocent:
+
+- ``jax.jit(f)(x)`` immediately invoked: builds a fresh executable (and
+  cache) per call, so the compile cache never hits.
+- ``jax.jit(...)`` constructed inside a ``for``/``while`` body: one
+  executable per iteration.
+- f-strings / ``str()`` keys derived from ``.shape``/``.ndim`` used as
+  dict keys or subscripts: a per-shape cache key explosion that turns a
+  bounded cache into an unbounded one.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List
+
+from repro.analysis.core import Finding, ModuleContext, register
+from repro.analysis.trace import TaintWalker, TracedFn, call_name
+
+_CONVERTERS = {"float", "int", "bool"}
+_NP_CONVERTERS = {"asarray", "array"}  # flagged only for np./numpy. prefixes
+
+
+def _np_prefixed(node: ast.Call) -> bool:
+    f = node.func
+    return (
+        isinstance(f, ast.Attribute)
+        and isinstance(f.value, ast.Name)
+        and f.value.id in ("np", "numpy")
+    )
+
+
+def _isinstance_free(test: ast.expr) -> ast.expr:
+    """``isinstance`` on a tracer is legal — peel gates so the taint check
+    sees only the parts that would actually force concretization."""
+
+    class _Strip(ast.NodeTransformer):
+        def visit_Call(self, node):
+            if call_name(node) == "isinstance":
+                return ast.copy_location(ast.Constant(value=True), node)
+            return self.generic_visit(node)
+
+    import copy
+
+    return _Strip().visit(copy.deepcopy(test))
+
+
+def _f1_in_fn(ctx: ModuleContext, fn: TracedFn) -> Iterator[Finding]:
+    walker = TaintWalker(fn)
+
+    def tainted(expr: ast.AST, line: int) -> bool:
+        if not walker.expr_tainted(expr):
+            return False
+        # A name proven concrete by an isinstance gate covering this line
+        # is exempt even though the walker still carries its taint.
+        names = {
+            n.id
+            for n in ast.walk(expr)
+            if isinstance(n, ast.Name) and n.id in walker.tainted
+        }
+        return not (names and all(
+            walker.name_concrete_at(n, line) for n in names
+        ))
+
+    for node in ast.walk(fn.node):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            if node is not fn.node:
+                continue  # nested defs are their own traced fns (or host fns)
+        if isinstance(node, (ast.If, ast.While)):
+            test = _isinstance_free(node.test)
+            if tainted(test, node.lineno):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                yield Finding(
+                    "F1", ctx.path, node.lineno, node.col_offset,
+                    f"Python `{kind}` on a traced value inside "
+                    f"{fn.reason}-traced function "
+                    f"`{getattr(fn.node, 'name', '<lambda>')}` — use "
+                    "jnp.where/lax.cond, or gate with "
+                    "`not isinstance(x, jax.core.Tracer)`",
+                )
+        elif isinstance(node, ast.IfExp):
+            test = _isinstance_free(node.test)
+            if tainted(test, node.lineno):
+                yield Finding(
+                    "F1", ctx.path, node.lineno, node.col_offset,
+                    "ternary on a traced value inside "
+                    f"{fn.reason}-traced function — use jnp.where",
+                )
+        elif isinstance(node, ast.Call):
+            cn = call_name(node)
+            hit = None
+            if cn in _CONVERTERS and isinstance(node.func, ast.Name):
+                hit = f"{cn}()"
+            elif cn in _NP_CONVERTERS and _np_prefixed(node):
+                hit = f"np.{cn}()"
+            elif cn == "item" and isinstance(node.func, ast.Attribute):
+                if walker.expr_tainted(node.func.value):
+                    yield Finding(
+                        "F1", ctx.path, node.lineno, node.col_offset,
+                        ".item() on a traced value inside "
+                        f"{fn.reason}-traced function — host sync is "
+                        "impossible under trace; return the array instead",
+                    )
+                continue
+            if hit and any(tainted(a, node.lineno) for a in node.args):
+                yield Finding(
+                    "F1", ctx.path, node.lineno, node.col_offset,
+                    f"{hit} on a traced value inside {fn.reason}-traced "
+                    f"function `{getattr(fn.node, 'name', '<lambda>')}` — "
+                    "concretizes under trace (TracerError or baked "
+                    "constant)",
+                )
+
+
+@register("F1", "tracer safety: concretizing ops on traced values")
+def f1_tracer_safety(ctx: ModuleContext) -> Iterator[Finding]:
+    # A scan body defined inside a jitted fn is discovered twice (its own
+    # TracedFn + the enclosing walk); report each site once.
+    seen = set()
+    for fn in ctx.trace_index.traced:
+        for f in _f1_in_fn(ctx, fn):
+            if (f.line, f.col) not in seen:
+                seen.add((f.line, f.col))
+                yield f
+
+
+# ---------------------------------------------------------------------------
+# F3
+# ---------------------------------------------------------------------------
+
+
+def _is_jit_call(node: ast.Call) -> bool:
+    return call_name(node) == "jit"
+
+
+def _shape_derived(expr: ast.AST) -> bool:
+    return any(
+        isinstance(n, ast.Attribute) and n.attr in ("shape", "ndim")
+        for n in ast.walk(expr)
+    )
+
+
+def _shape_string(expr: ast.AST) -> bool:
+    """f-string or str() whose payload reads .shape/.ndim."""
+    if isinstance(expr, ast.JoinedStr):
+        return any(
+            _shape_derived(v.value)
+            for v in expr.values
+            if isinstance(v, ast.FormattedValue)
+        )
+    if isinstance(expr, ast.Call) and call_name(expr) == "str":
+        return any(_shape_derived(a) for a in expr.args)
+    return False
+
+
+class _F3Walker(ast.NodeVisitor):
+    def __init__(self, ctx: ModuleContext):
+        self.ctx = ctx
+        self.findings: List[Finding] = []
+        self._loop_depth = 0
+
+    def visit_For(self, node):
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    visit_While = visit_For
+    visit_AsyncFor = visit_For
+
+    def visit_FunctionDef(self, node):
+        # A jit built inside a def that merely *sits* in a loop only runs
+        # when the def is called — reset loop context at function boundaries.
+        saved, self._loop_depth = self._loop_depth, 0
+        self.generic_visit(node)
+        self._loop_depth = saved
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_Lambda = visit_FunctionDef
+
+    def visit_Call(self, node: ast.Call):
+        # jax.jit(f)(x): the callee is itself a jit(...) call expression.
+        if isinstance(node.func, ast.Call) and _is_jit_call(node.func):
+            self.findings.append(Finding(
+                "F3", self.ctx.path, node.lineno, node.col_offset,
+                "jax.jit(f)(...) immediately invoked — a fresh executable "
+                "per call, the compile cache never hits; hoist the jit to "
+                "module/init scope",
+            ))
+        elif _is_jit_call(node) and self._loop_depth > 0:
+            self.findings.append(Finding(
+                "F3", self.ctx.path, node.lineno, node.col_offset,
+                "jax.jit(...) constructed inside a loop — one executable "
+                "per iteration breaks the num_compilations bound; build "
+                "once outside the loop",
+            ))
+        self.generic_visit(node)
+
+    def visit_Subscript(self, node: ast.Subscript):
+        if _shape_string(node.slice):
+            self.findings.append(Finding(
+                "F3", self.ctx.path, node.lineno, node.col_offset,
+                "shape-derived string used as a subscript key — per-shape "
+                "cache keys grow without bound; key on the executable or "
+                "a static config instead",
+            ))
+        self.generic_visit(node)
+
+    def visit_Dict(self, node: ast.Dict):
+        for k in node.keys:
+            if k is not None and _shape_string(k):
+                self.findings.append(Finding(
+                    "F3", self.ctx.path, k.lineno, k.col_offset,
+                    "shape-derived string used as a dict key — per-shape "
+                    "cache keys grow without bound",
+                ))
+        self.generic_visit(node)
+
+
+@register("F3", "retrace hazards: per-call jit, jit-in-loop, shape-string keys")
+def f3_retrace(ctx: ModuleContext) -> Iterator[Finding]:
+    w = _F3Walker(ctx)
+    w.visit(ctx.tree)
+    yield from w.findings

@@ -1,0 +1,361 @@
+"""Shared AST infrastructure for the trace-sensitive rules (F1–F4).
+
+Two jobs:
+
+1. **Traced-function discovery** (:class:`TraceIndex`): find every local
+   ``def``/``lambda`` whose parameters are tracers at run time — functions
+   passed to ``jax.jit``/``vmap``/``pmap``/``grad``, ``jax.lax.scan`` /
+   ``fori_loop`` / ``while_loop`` / ``cond`` bodies, ``pl.pallas_call``
+   kernels, and ``shard_map`` bodies — following the repo's idiom of
+   indirection through ``functools.partial`` and simple name assignment
+   (``body = partial(_engine_round, loss_fn, **kw); jax.jit(body)``).
+   Keyword arguments bound via ``partial(fn, key=...)`` are *static* at
+   trace time, so the matching keyword-only parameters are excluded from
+   the traced set.
+
+2. **Taint walking** (:func:`tainted_names_at`): within a traced function,
+   track which local names (conservatively) hold traced values: the traced
+   positional parameters seed the set, assignments propagate it, and a few
+   well-known *launders* clear it — ``.shape``/``.ndim``/``.dtype``/
+   ``.size`` access, ``len()``, and the repo's explicit concreteness gate
+   ``if not isinstance(x, jax.core.Tracer):``.
+
+Everything is name-based and intraprocedural; the rules accept the usual
+lint bargain (miss aliasing through containers, attributes, and cross-
+module flow) in exchange for zero false positives on the current tree.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+__all__ = ["TracedFn", "TraceIndex", "TaintWalker", "call_name"]
+
+# Callables whose *first* function-valued argument is traced.
+_TRANSFORMS = {
+    "jit",
+    "vmap",
+    "pmap",
+    "grad",
+    "value_and_grad",
+    "checkpoint",
+    "remat",
+    "shard_map",
+    "pallas_call",
+    "custom_vjp",
+    "custom_jvp",
+}
+# jax.lax control-flow: which arg positions are traced bodies.
+_LAX_BODIES = {
+    "scan": (0,),
+    "fori_loop": (2,),
+    "while_loop": (0, 1),
+    "cond": (1, 2),
+    "switch": None,  # all args after the index are branches
+    "map": (0,),
+    "associative_scan": (0,),
+}
+
+
+def call_name(node: ast.Call) -> str:
+    """Dotted tail of the callee: ``jax.jit`` -> ``jit``, ``pl.pallas_call``
+    -> ``pallas_call``, bare ``jit`` -> ``jit``."""
+    f = node.func
+    while isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def full_call_name(node: ast.Call) -> str:
+    parts: List[str] = []
+    f = node.func
+    while isinstance(f, ast.Attribute):
+        parts.append(f.attr)
+        f = f.value
+    if isinstance(f, ast.Name):
+        parts.append(f.id)
+    return ".".join(reversed(parts))
+
+
+class TracedFn:
+    """A function definition whose parameters carry tracers at run time."""
+
+    def __init__(self, node, reason: str,
+                 static_params: Optional[Set[str]] = None):
+        self.node = node  # ast.FunctionDef | ast.Lambda
+        self.reason = reason  # e.g. "jax.jit", "jax.lax.scan body"
+        self.static_params = static_params or set()
+
+    def traced_params(self) -> Set[str]:
+        # Keyword-only params are excluded: the codebase's traced data flows
+        # positionally, and kwonly args are exactly where static config is
+        # partial-bound (E, B, codec, strategy, axis_name, ...) — often via
+        # **kwargs splats the static-kwarg tracking can't see.
+        a = self.node.args
+        names = [p.arg for p in a.posonlyargs + a.args]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        return {n for n in names if n not in self.static_params}
+
+
+class _FnCollector(ast.NodeVisitor):
+    """First pass: index every def/lambda by name (scope-flat; collisions
+    keep the last definition, which matches how the repo reuses helper
+    names) and record partial() aliases."""
+
+    def __init__(self):
+        self.defs: Dict[str, ast.AST] = {}
+        self.all_defs: List[ast.AST] = []
+        # name -> (underlying callable name, static kwnames bound by partial)
+        self.partials: Dict[str, Tuple[str, Set[str]]] = {}
+        # plain alias: name -> name
+        self.aliases: Dict[str, str] = {}
+
+    def visit_FunctionDef(self, node):
+        self.defs[node.name] = node
+        self.all_defs.append(node)
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Assign(self, node):
+        if len(node.targets) == 1 and isinstance(node.targets[0], ast.Name):
+            tgt = node.targets[0].id
+            v = node.value
+            if isinstance(v, ast.Lambda):
+                self.defs[tgt] = v
+                self.all_defs.append(v)
+            elif isinstance(v, ast.Name):
+                self.aliases[tgt] = v.id
+            elif isinstance(v, ast.Call) and call_name(v) == "partial":
+                inner = v.args[0] if v.args else None
+                if isinstance(inner, ast.Name):
+                    kw = {k.arg for k in v.keywords if k.arg is not None}
+                    self.partials[tgt] = (inner.id, kw)
+        self.generic_visit(node)
+
+
+class TraceIndex:
+    """Maps the module's traced functions. Built once per file, shared by
+    all rules through ``ModuleContext.trace_index``."""
+
+    def __init__(self, tree: ast.Module):
+        col = _FnCollector()
+        col.visit(tree)
+        self._col = col
+        self.traced: List[TracedFn] = []
+        self._seen: Set[int] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                self._scan_call(node)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._scan_decorators(node)
+
+    # -- resolution helpers -------------------------------------------------
+
+    def _resolve(self, name: str, depth: int = 0) -> Tuple[Optional[ast.AST], Set[str]]:
+        """Follow alias/partial chains from a name to a local def, gathering
+        statically-bound kwarg names along the way."""
+        if depth > 8:
+            return None, set()
+        if name in self._col.defs:
+            return self._col.defs[name], set()
+        if name in self._col.aliases:
+            return self._resolve(self._col.aliases[name], depth + 1)
+        if name in self._col.partials:
+            inner, kw = self._col.partials[name]
+            node, inner_kw = self._resolve(inner, depth + 1)
+            return node, kw | inner_kw
+        return None, set()
+
+    def _mark(self, arg: ast.AST, reason: str,
+              extra_static: Optional[Set[str]] = None):
+        node = None
+        static: Set[str] = set(extra_static or ())
+        if isinstance(arg, ast.Lambda):
+            node = arg
+        elif isinstance(arg, ast.Name):
+            node, kw = self._resolve(arg.id)
+            static |= kw
+        elif isinstance(arg, ast.Call) and call_name(arg) == "partial":
+            inner = arg.args[0] if arg.args else None
+            if isinstance(inner, ast.Name):
+                node, kw = self._resolve(inner.id)
+                static |= kw
+            static |= {k.arg for k in arg.keywords if k.arg is not None}
+        if node is None or id(node) in self._seen:
+            return
+        self._seen.add(id(node))
+        # Positional partial args also shift traced params, but the repo
+        # binds statics by keyword; positional bindings stay conservative
+        # (still considered traced) rather than guessing arity.
+        self.traced.append(TracedFn(node, reason, static_params=static))
+
+    # -- discovery ----------------------------------------------------------
+
+    def _scan_decorators(self, node):
+        for dec in node.decorator_list:
+            name = None
+            if isinstance(dec, ast.Call):
+                name = call_name(dec)
+            elif isinstance(dec, ast.Attribute):
+                name = dec.attr
+            elif isinstance(dec, ast.Name):
+                name = dec.id
+            if name in _TRANSFORMS and id(node) not in self._seen:
+                self._seen.add(id(node))
+                self.traced.append(TracedFn(node, f"@{name}"))
+
+    def _scan_call(self, node: ast.Call):
+        name = call_name(node)
+        if name in _TRANSFORMS:
+            # transform(fn, ...): fn is the first positional arg (pallas_call
+            # and shard_map also take it first).
+            if node.args:
+                self._mark(node.args[0], f"{full_call_name(node)}")
+            for kw in node.keywords:
+                if kw.arg in ("fun", "f", "kernel"):
+                    self._mark(kw.value, f"{full_call_name(node)}")
+        elif name in _LAX_BODIES:
+            positions = _LAX_BODIES[name]
+            reason = f"{full_call_name(node)} body"
+            if positions is None:  # switch: every branch after the index
+                for a in node.args[1:]:
+                    self._mark(a, reason)
+            else:
+                for i in positions:
+                    if i < len(node.args):
+                        self._mark(node.args[i], reason)
+
+
+# ---------------------------------------------------------------------------
+# Taint walking
+# ---------------------------------------------------------------------------
+
+_LAUNDER_ATTRS = {"shape", "ndim", "dtype", "size", "sharding"}
+
+
+class TaintWalker:
+    """Per-traced-function forward taint pass. Statement-ordered, loop-
+    and branch-insensitive (a name tainted anywhere stays tainted), which
+    overapproximates taint but *never* untaints incorrectly — except via
+    the explicit launder idioms, which are exactly the ones the repo uses
+    to mean "this value is concrete here"."""
+
+    def __init__(self, fn: TracedFn):
+        self.fn = fn
+        self.tainted: Set[str] = set(fn.traced_params())
+        # line ranges (start, end) in which an `isinstance(x, Tracer)`
+        # check makes x concrete — recorded as (name, lo, hi).
+        self.concrete_ranges: List[Tuple[str, int, int]] = []
+        body = getattr(fn.node, "body", [])
+        # Lambda bodies are a single expression, not a statement list.
+        self._walk_body(body if isinstance(body, list) else [])
+
+    # A value expression is tainted if any Name it reads is tainted and it
+    # is not laundered by shape-ish attribute access or len().
+    def expr_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Attribute) and node.attr in _LAUNDER_ATTRS:
+            return False
+        if isinstance(node, ast.Call):
+            cn = call_name(node)
+            if cn == "len":
+                return False
+            if cn in ("int", "float", "bool", "item", "asarray", "array"):
+                # The *call* may be a violation (rule F1's business), but
+                # its result is concrete.
+                return any(self.expr_tainted(a) for a in node.args)
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.Attribute) and child.attr in _LAUNDER_ATTRS:
+                continue
+            if self.expr_tainted(child):
+                return True
+        return False
+
+    def name_concrete_at(self, name: str, line: int) -> bool:
+        return any(
+            n == name and lo <= line <= hi
+            for n, lo, hi in self.concrete_ranges
+        )
+
+    # -- statement walking --------------------------------------------------
+
+    def _targets(self, t: ast.AST) -> Iterable[str]:
+        if isinstance(t, ast.Name):
+            yield t.id
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                yield from self._targets(e)
+        elif isinstance(t, ast.Starred):
+            yield from self._targets(t.value)
+
+    def _walk_body(self, body: Iterable[ast.stmt]):
+        for stmt in body:
+            self._walk_stmt(stmt)
+
+    def _walk_stmt(self, stmt: ast.stmt):
+        if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            value = stmt.value
+            targets = (
+                stmt.targets if isinstance(stmt, ast.Assign) else [stmt.target]
+            )
+            if value is not None and self.expr_tainted(value):
+                for t in targets:
+                    for name in self._targets(t):
+                        self.tainted.add(name)
+            else:
+                # Reassignment from an untainted value clears taint for
+                # simple name targets (tuple targets stay conservative).
+                for t in targets:
+                    if isinstance(t, ast.Name):
+                        self.tainted.discard(t.id)
+        elif isinstance(stmt, ast.If):
+            gate = self._not_tracer_gate(stmt.test)
+            if gate is not None and stmt.body:
+                lo = stmt.body[0].lineno
+                hi = max(
+                    getattr(s, "end_lineno", s.lineno) for s in stmt.body
+                )
+                self.concrete_ranges.append((gate, lo, hi))
+            self._walk_body(stmt.body)
+            self._walk_body(stmt.orelse)
+            return
+        elif isinstance(stmt, (ast.For, ast.While)):
+            self._walk_body(stmt.body)
+            self._walk_body(stmt.orelse)
+            return
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            self._walk_body(stmt.body)
+            return
+        elif isinstance(stmt, ast.Try):
+            self._walk_body(stmt.body)
+            for h in stmt.handlers:
+                self._walk_body(h.body)
+            self._walk_body(stmt.orelse)
+            self._walk_body(stmt.finalbody)
+            return
+        # Nested defs/lambdas get their own TaintWalker if they are traced;
+        # do not descend here.
+
+    @staticmethod
+    def _not_tracer_gate(test: ast.expr) -> Optional[str]:
+        """Match ``not isinstance(x, jax.core.Tracer)`` (or any dotted path
+        ending in Tracer) and return ``x``'s name."""
+        if not (isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not)):
+            return None
+        call = test.operand
+        if not (isinstance(call, ast.Call) and call_name(call) == "isinstance"):
+            return None
+        if len(call.args) != 2 or not isinstance(call.args[0], ast.Name):
+            return None
+        kind = call.args[1]
+        tail = kind.attr if isinstance(kind, ast.Attribute) else (
+            kind.id if isinstance(kind, ast.Name) else ""
+        )
+        if tail == "Tracer":
+            return call.args[0].id
+        return None

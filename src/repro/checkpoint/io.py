@@ -11,10 +11,8 @@ format already records the PartitionSpec string for that purpose).
 """
 from __future__ import annotations
 
-import dataclasses
-import json
 from pathlib import Path
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import msgpack

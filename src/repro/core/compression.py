@@ -59,7 +59,7 @@ Codecs:
 from __future__ import annotations
 
 import math
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.optim.optimizers import Optimizer, apply_updates, sgd
 from repro.utils.tree import tree_weighted_mean  # noqa: F401 (reference impl)
 
 

@@ -29,8 +29,7 @@ Beyond-paper: ``outer_optimizer`` applies a server-side optimizer to the
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -117,8 +117,10 @@ class RoundScheduler:
                 # Honest per-round timing: stop the clock only after the
                 # round's outputs are synced — once dispatch is async, the
                 # un-synced time would be a dispatch latency, not a round
-                # time.
-                loss = float(jax.block_until_ready(metrics["loss"]))
+                # time. device_get both syncs and keeps the D2H read
+                # explicit, so the loop stays legal under
+                # transfer_guard("disallow") on guarded backends.
+                loss = float(jax.device_get(metrics["loss"]))
             else:
                 loss, sim_s = self._latency_round(lat_rng, speed)
             rec = RoundRecord(
@@ -174,7 +176,7 @@ class RoundScheduler:
             eng._spe, ids, valid, key, lr,
         )
         eng.round_idx += 1
-        return float(jax.block_until_ready(loss)), sim_s
+        return float(jax.device_get(loss)), sim_s
 
     # ------------------------------------------------------------------
     # buffered-async schedule

@@ -38,7 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, ClassVar, Dict, Optional, Tuple, Union
+from typing import Any, ClassVar, Dict, Tuple, Union
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ Implements the paper's two MNIST partitions verbatim plus standard extensions:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List
 
 import numpy as np
 
@@ -49,7 +49,6 @@ def partition_pathological_noniid(
     """Paper's pathological partition: sort by label, 200 shards of 300,
     2 shards per client -> most clients see only two digits."""
     rng = np.random.default_rng(seed)
-    n = len(labels)
     order = np.argsort(labels, kind="stable")
     n_shards = n_clients * shards_per_client
     shards = np.array_split(order, n_shards)

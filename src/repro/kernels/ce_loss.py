@@ -37,7 +37,9 @@ def _ce_kernel(h_ref, w_ref, lbl_ref, loss_ref, m_scr, l_scr, g_scr, *,
 
     h = h_ref[...].astype(jnp.float32)               # (bt, d)
     w = w_ref[...].astype(jnp.float32)               # (d, bv)
-    logits = h @ w                                   # (bt, bv)
+    logits = jax.lax.dot_general(                    # (bt, bv)
+        h, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
     vpos = j * block_v + jax.lax.broadcasted_iota(jnp.int32, (block_t, block_v), 1)
     logits = jnp.where(vpos < vocab, logits, NEG_INF)
 

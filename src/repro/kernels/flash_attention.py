@@ -41,7 +41,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
     k = k_ref[0].astype(jnp.float32)                  # (bk, d)
     v = v_ref[0].astype(jnp.float32)                  # (bk, d)
-    s = q @ k.T                                       # (bq, bk) on the MXU
+    s = jax.lax.dot_general(                          # (bq, bk) on the MXU
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )
 
     qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
     kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
@@ -57,7 +59,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     p = jnp.exp(s - m_new[:, None])
     corr = jnp.exp(m_prev - m_new)
     l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
-    acc_scr[...] = acc_scr[...] * corr[:, None] + p @ v
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    acc_scr[...] = acc_scr[...] * corr[:, None] + pv
     m_scr[...] = m_new
 
     @pl.when(kj == nk - 1)

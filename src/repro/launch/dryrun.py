@@ -183,7 +183,6 @@ def main():
                 if args.skip_existing and path.exists():
                     print(f"[skip] {path.name}")
                     continue
-                t0 = time.time()
                 try:
                     overrides = {}
                     for kv in args.override:

@@ -115,7 +115,6 @@ def loop_scaled_collective_stats(hlo_text: str) -> CollectiveStats:
     cur = None
     lines_by_comp = defaultdict(list)
     for line in hlo_text.splitlines():
-        m = re.match(r"\s*%?([\w\.\-]+)\s*\([^)]*\)\s*->", line)
         if line.startswith(("HloModule",)):
             continue
         cm = re.match(r"\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(", line)

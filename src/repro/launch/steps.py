@@ -20,17 +20,11 @@ from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.engine import RoundBatch, RoundState
-from repro.core.local_sgd import (
-    LocalSGDConfig,
-    as_round_step,
-    build_fedsgd_train_step,
-    replicate_for_groups,
-)
+from repro.core.local_sgd import LocalSGDConfig, as_round_step, build_fedsgd_train_step
 from repro.models.transformer import TransformerLM
 from repro.optim.optimizers import adamw
 from repro.sharding.rules import (

@@ -12,7 +12,6 @@ parameter average across the pod axis (see core/local_sgd.py).
 """
 import argparse
 import os
-import sys
 
 
 def main(argv=None):
@@ -42,12 +41,9 @@ def main(argv=None):
             f"--xla_force_host_platform_device_count={n_force}"
         )
 
-    import dataclasses
-
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from jax.sharding import PartitionSpec as P
 
     from repro.checkpoint import save_checkpoint
     from repro.configs import get_config
@@ -63,7 +59,6 @@ def main(argv=None):
     from repro.launch.mesh import make_production_mesh
     from repro.models.transformer import TransformerLM
     from repro.optim import adamw, momentum
-    from repro.sharding.rules import batch_pspecs, named, param_pspecs, add_leading_axis
 
     # --- mesh
     if args.mesh == "production":
@@ -119,10 +114,6 @@ def main(argv=None):
         params_g = replicate_for_groups(params, G)
         opt_g = jax.vmap(inner.init)(params_g)
         outer_state = outer.init(params) if outer else None
-        p_specs = add_leading_axis(
-            param_pspecs(jax.eval_shape(lambda: params), mesh, cfg=cfg, kind="compute"),
-            "pod",
-        )
         step = jax.jit(round_step)
         with mesh:
             for r in range(args.rounds):

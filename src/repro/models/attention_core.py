@@ -12,7 +12,6 @@ and sliding-window masking (rolling local attention for the long_500k shape).
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ norms and softmax statistics in float32.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -160,7 +159,6 @@ def attention_apply(
         # into batch parallelism instead (one all-to-all in, one out).
         from jax.sharding import PartitionSpec as _P
 
-        cs = _P(("data", "model"))
         q = jax.lax.with_sharding_constraint(q, _P(("data", "model"), None, None, None))
         k = jax.lax.with_sharding_constraint(k, _P(("data", "model"), None, None, None))
         v = jax.lax.with_sharding_constraint(v, _P(("data", "model"), None, None, None))

@@ -6,7 +6,6 @@ for LSTM) matching the era of the paper's models.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

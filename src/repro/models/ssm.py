@@ -57,7 +57,6 @@ def mamba_init(rng, cfg: ModelConfig, dtype):
     ks = jax.random.split(rng, 6)
     # dt bias initialized so softplus(dt_bias) ~ U[1e-3, 1e-1] (mamba ref).
     u = jax.random.uniform(ks[4], (di,), jnp.float32)
-    dt_init = np.log(np.e - 1) + u * 0  # placeholder; refined below
     dt = jnp.exp(u * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3))
     dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
     return {
@@ -87,7 +86,6 @@ def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
 
 def _ssm_inputs(p, cfg, xz):
     """Shared front half: conv + SiLU + (dt, B, C)."""
-    s = cfg.ssm
     di = p["dt_proj"].shape[1]
     dt_rank = p["dt_proj"].shape[0]
     x, z = jnp.split(xz, 2, axis=-1)

@@ -17,8 +17,7 @@ Public entry points (used by launch/, tests and benchmarks):
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -32,7 +32,6 @@ def mlstm_init(rng, cfg: ModelConfig, dtype):
     d = cfg.d_model
     H = cfg.n_heads
     di = 2 * d  # up-projection factor 2 (paper)
-    hd = di // H
     ks = jax.random.split(rng, 7)
     return {
         "up": nn.glorot(ks[0], (d, 2 * di), dtype),   # -> (x_branch, z_gate)

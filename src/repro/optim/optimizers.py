@@ -12,7 +12,6 @@ client updates; Adam/AdamW serve the production transformer substrate.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

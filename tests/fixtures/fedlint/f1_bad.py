@@ -1,0 +1,26 @@
+"""Seeded F1 violations: concretizing ops on traced values.
+
+Never imported — tests/test_analysis.py lints this file and asserts the
+`# expect:` markers match the findings exactly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def step(params, x):
+    if x.sum() > 0:  # expect: F1
+        params = params + 1.0
+    lr = float(x[0])  # expect: F1
+    return params * lr
+
+
+def body(carry, t):
+    y = carry + t
+    z = np.asarray(y)  # expect: F1
+    return y, z
+
+
+def run(xs):
+    return jax.lax.scan(body, jnp.zeros(3), xs)

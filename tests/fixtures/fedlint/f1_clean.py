@@ -1,0 +1,25 @@
+"""Clean twin of f1_bad: shape-laundered branches, concreteness gates, and
+host-only conversions are all fine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def step(params, x):
+    n = x.shape[0]  # shape access launders the taint
+    if n > 2:  # concrete python int: fine
+        params = params * 2.0
+    scale = float(np.pi)  # host constant: fine
+    if not isinstance(x, jax.core.Tracer):
+        scale = scale * float(x[0])  # gated: x is concrete here
+    return params * scale
+
+
+def body(carry, t):
+    y = carry + t
+    return y, jnp.tanh(y)
+
+
+def run(xs):
+    return jax.lax.scan(body, jnp.zeros(3), xs)

@@ -1,0 +1,16 @@
+"""Seeded F2 violations: a dropped split output (the PR 7 trailing-refill
+shape) and a key consumed by two samplers."""
+import jax
+
+
+def refill(key, n):
+    k_a, k_b, k_tail = jax.random.split(key, 3)  # expect: F2
+    a = jax.random.normal(k_a, (n,))
+    b = jax.random.normal(k_b, (n,))
+    return a + b
+
+
+def draw_twice(key, n):
+    x = jax.random.normal(key, (n,))
+    y = jax.random.uniform(key, (n,))  # expect: F2
+    return x + y

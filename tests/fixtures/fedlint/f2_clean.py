@@ -1,0 +1,24 @@
+"""Clean twin of f2_bad: every split output threaded, fold_in derivation
+reuse (the sanctioned pattern), numpy Generator methods ignored."""
+import jax
+import numpy as np
+
+
+def refill(key, n):
+    k_a, k_b = jax.random.split(key)
+    a = jax.random.normal(k_a, (n,))
+    b = jax.random.normal(k_b, (n,))
+    return a + b
+
+
+def derive(key, n):
+    k_a = jax.random.fold_in(key, 0)
+    k_b = jax.random.fold_in(key, 1)  # same parent, distinct data: fine
+    return jax.random.normal(k_a, (n,)) + jax.random.normal(k_b, (n,))
+
+
+def host_side(seed, n):
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)  # numpy Generator, not a jax key
+    extra = rng.permutation(n)
+    return perm, extra

@@ -1,0 +1,22 @@
+"""Seeded F3 violations: jit-in-loop, inline jit-and-call, shape-string
+cache keys."""
+import jax
+
+_CACHE = {}
+
+
+def train(xs):
+    total = 0.0
+    for x in xs:
+        f = jax.jit(lambda a: a * 2)  # expect: F3
+        total = total + f(x)
+    return total
+
+
+def apply_once(x):
+    return jax.jit(lambda a: a + 1)(x)  # expect: F3
+
+
+def cached(x):
+    _CACHE[f"k{x.shape}"] = x  # expect: F3
+    return _CACHE

@@ -1,0 +1,18 @@
+"""Seeded F4 violations: donated buffers read after the donating call (the
+PR 4 deep-copy bug shape)."""
+import jax
+import jax.numpy as jnp
+
+_step = jax.jit(lambda p, g: p - g, donate_argnums=(0,))
+
+
+def train(params, grads):
+    out = _step(params, grads)
+    norm = jnp.linalg.norm(params[0])  # expect: F4
+    return out, norm
+
+
+def train2(params, grads):
+    new = _step(params, grads)
+    stale = params  # expect: F4
+    return new, stale

@@ -1,0 +1,18 @@
+"""Clean twin of f4_bad: the engine idiom — the donating call's own
+assignment rebinds the donated name."""
+import jax
+import jax.numpy as jnp
+
+_step = jax.jit(lambda p, g: p - g, donate_argnums=(0,))
+
+
+def train(params, grads):
+    params = _step(params, grads)
+    norm = jnp.linalg.norm(params[0])  # rebound: this reads the NEW buffer
+    return params, norm
+
+
+def loop(params, grads):
+    for g in grads:
+        params = _step(params, g)
+    return params

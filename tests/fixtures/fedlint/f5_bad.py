@@ -1,0 +1,20 @@
+"""Seeded F5 violations: a kernel matmul with no accumulation dtype, and a
+grid computed with plain floor division."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _agg_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[...]
+    w = w_ref[...]
+    o_ref[...] = w @ x  # expect: F5
+
+
+def aggregate(x, w, block_n=128):
+    n = x.shape[0]
+    return pl.pallas_call(
+        _agg_kernel,
+        grid=(n // block_n,),  # expect: F5
+        out_shape=jax.ShapeDtypeStruct(x.shape[1:], jnp.float32),
+    )(x, w)

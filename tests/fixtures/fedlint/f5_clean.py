@@ -1,0 +1,25 @@
+"""Clean twin of f5_bad: fp32 accumulation pinned, grid covered by the
+(-n) % block pad idiom."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _agg_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[...]
+    w = w_ref[...]
+    o_ref[...] = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+
+
+def aggregate(x, w, block_n=128):
+    n = x.shape[0]
+    pad = (-n) % block_n
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return pl.pallas_call(
+        _agg_kernel,
+        grid=(x.shape[0] // block_n,),
+        out_shape=jax.ShapeDtypeStruct(x.shape[1:], jnp.float32),
+    )(x, w)

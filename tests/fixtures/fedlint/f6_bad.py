@@ -1,0 +1,11 @@
+"""Seeded F6 violations: a mutable default and a non-JSON field type on a
+frozen spec dataclass."""
+import dataclasses
+from typing import Callable, List
+
+
+@dataclasses.dataclass(frozen=True)
+class BadSpec:
+    name: str = "exp"
+    tags: List[str] = []  # expect: F6
+    transform: Callable = None  # expect: F6

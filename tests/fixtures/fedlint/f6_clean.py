@@ -1,0 +1,22 @@
+"""Clean twin of f6_bad: tuples, default_factory, nested frozen-spec
+defaults, and non-frozen classes are all out of F6's blast radius."""
+import dataclasses
+from typing import Dict, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Inner:
+    k: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class GoodSpec:
+    name: str = "exp"
+    tags: Tuple[str, ...] = ()
+    weights: Dict[str, float] = dataclasses.field(default_factory=dict)
+    inner: Inner = Inner()  # frozen nested spec: serializes fine
+
+
+@dataclasses.dataclass
+class MutableRuntime:  # not frozen, not a spec: out of scope
+    cache: list = dataclasses.field(default_factory=list)

@@ -1,0 +1,10 @@
+# fedlint: legacy-seed
+"""A quarantined file: the header above makes fedlint skip it entirely
+(and report it in skipped_legacy) despite the blatant violation below."""
+import jax
+
+
+def draw_twice(key, n):
+    x = jax.random.normal(key, (n,))
+    y = jax.random.uniform(key, (n,))
+    return x + y

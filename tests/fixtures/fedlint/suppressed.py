@@ -1,0 +1,20 @@
+"""Every violation here carries a suppression — the lint must come back
+empty. Exercises same-line trailers and standalone line-above directives."""
+import jax
+
+
+def draw_twice(key, n):
+    x = jax.random.normal(key, (n,))
+    y = jax.random.uniform(key, (n,))  # fedlint: disable=F2
+    return x + y
+
+
+def refill(key):
+    # fedlint: disable=F2
+    k_a, k_b, k_tail = jax.random.split(key, 3)
+    return k_a, k_b
+
+
+def apply_once(x):
+    # fedlint: disable=F3,F1
+    return jax.jit(lambda a: a + 1)(x)

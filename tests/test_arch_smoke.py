@@ -1,6 +1,8 @@
 """Per-architecture smoke tests (deliverable f): a REDUCED variant of each
 assigned family runs one forward/train step on CPU — shapes + finiteness —
 plus exact prefill+decode vs full-forward consistency."""
+# fedlint: disable-file=F3  (one-shot jit-and-call is fine in tests: each
+# executable runs exactly once, so there is no cache to defeat)
 import dataclasses
 
 import jax

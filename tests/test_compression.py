@@ -2,6 +2,8 @@
 semantics, identity-codec equivalence with the plain round, byte accounting
 (realized vs expected), fused quantize-aggregate vs the generic path, and
 the compressed engine's compile-count guarantee."""
+# fedlint: disable-file=F3  (one-shot jit-and-call is fine in tests: each
+# executable runs exactly once, so there is no cache to defeat)
 import jax
 import jax.numpy as jnp
 import numpy as np

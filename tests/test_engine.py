@@ -1,3 +1,5 @@
+# fedlint: disable-file=F3  (one-shot jit-and-call is fine in tests: each
+# executable runs exactly once, so there is no cache to defeat)
 """RoundEngine: static-shape round pipeline + Pallas-backed aggregation.
 
 Covers the acceptance criteria of the engine refactor:

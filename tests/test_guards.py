@@ -1,0 +1,125 @@
+"""Runtime guard rails over the real round loop (slow lane).
+
+The contract under test, per execution lane (plain host-sampling, plain
+device-sampling, codec, superstep, and both sharded variants): a warmed
+``RoundEngine.run`` performs ZERO implicit host<->device transfers — all
+staging happens inside the engine's grep-able ``sanctioned_staging``
+blocks — and compiles ZERO new executables. This is the runtime twin of
+lint rules F1/F3 and the generalization of the ``num_compilations <= 2``
+tests.
+
+Backend honesty (see repro/analysis/guards.py): on CPU, device->host
+reads are zero-copy and unguardable, so what these tests pin is the
+host->device direction — the one that silently creeps into round loops —
+plus, on guarded backends (TPU), the same code path also proves explicit
+D2H syncs.
+
+Warm-up note: the superstep executable specializes on R (the scan
+length), so each test warms with the SAME (n_rounds, rounds_per_step)
+shape it then guards.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.analysis.guards import (
+    RetraceError,
+    retrace_guard,
+    tracer_leak_checks,
+    transfer_guard,
+)
+from repro.core import FedAvgConfig, RoundEngine, quantize_codec
+from repro.launch.mesh import make_client_mesh
+from repro.models import mnist_2nn
+
+pytestmark = pytest.mark.slow
+
+
+def _clients(sizes, d=12, classes=5):
+    rng = np.random.default_rng(0)
+    return [
+        (rng.normal(size=(n, d)).astype(np.float32),
+         rng.integers(0, classes, n).astype(np.int32))
+        for n in sizes
+    ]
+
+
+def _engine(**kw):
+    model = mnist_2nn(n_classes=5, d_in=12)
+    params = model.init(jax.random.PRNGKey(0))
+    cfg = FedAvgConfig(C=0.75, E=1, B=8, lr=0.2, lr_decay=0.98, seed=7)
+    return RoundEngine(
+        model.loss, params, _clients([9, 24, 17, 8]), cfg, **kw
+    )
+
+
+LANES = {
+    "plain-host": (dict(device_sampling=False), dict()),
+    "plain-device": (dict(device_sampling=True), dict(rounds_per_step=1)),
+    "codec": (dict(device_sampling=True, codec=quantize_codec(8)),
+              dict(rounds_per_step=1)),
+    "superstep": (dict(device_sampling=True), dict(rounds_per_step=3)),
+    "sharded": (dict(device_sampling=True, mesh="MESH"),
+                dict(rounds_per_step=1)),
+    "sharded-superstep": (dict(device_sampling=True, mesh="MESH"),
+                          dict(rounds_per_step=3)),
+}
+
+
+@pytest.mark.parametrize("lane", sorted(LANES))
+def test_warmed_round_loop_has_no_implicit_transfers_and_no_retrace(lane):
+    eng_kw, run_kw = LANES[lane]
+    eng_kw = dict(eng_kw)
+    if eng_kw.get("mesh") == "MESH":
+        eng_kw["mesh"] = make_client_mesh()
+    eng = _engine(**eng_kw)
+    eng.run(3, **run_kw)  # warm: same executable shapes as the guarded run
+    with transfer_guard("disallow"):
+        with retrace_guard(lambda: eng.num_compilations, what=lane):
+            h = eng.run(3, **run_kw)
+    assert len(h.records) == 6
+    assert all(np.isfinite(r.train_loss) for r in h.records)
+
+
+def test_retrace_guard_raises_on_new_compilation():
+    eng = _engine(device_sampling=True)
+    eng.run(2, rounds_per_step=2)
+    with pytest.raises(RetraceError, match="new compilation"):
+        with retrace_guard(lambda: eng.num_compilations, what="R-change"):
+            # A different scan length is a different executable — exactly
+            # the specialization the guard must catch.
+            eng.run(3, rounds_per_step=3)
+
+
+def test_retrace_guard_accepts_jitted_function_directly():
+    f = jax.jit(lambda a: a * 2)
+    f(np.float32(1.0))
+    with retrace_guard(f):
+        f(np.float32(2.0))  # same shape/dtype: cache hit
+    with pytest.raises(RetraceError):
+        with retrace_guard(f):
+            f(np.ones(3, np.float32))  # new shape: new executable
+
+
+def test_transfer_guard_blocks_implicit_h2d():
+    f = jax.jit(lambda a: a + 1)
+    f(np.ones(3, np.float32))  # warm (compile-time transfers are setup)
+    with pytest.raises(Exception, match="[Dd]isallowed"):
+        with transfer_guard("disallow"):
+            f(np.ones(3, np.float32))  # numpy arg: implicit H2D
+    with transfer_guard("disallow"):
+        f(jax.device_put(np.ones(3, np.float32)))  # explicit staging: fine
+
+
+def test_tracer_leak_checks_catches_escaped_tracer():
+    leaked = []
+
+    @jax.jit
+    def bad(x):
+        leaked.append(x)  # the F1 bug class, dynamically
+        return x * 2
+
+    with pytest.raises(Exception):
+        with tracer_leak_checks():
+            bad(np.float32(1.0))

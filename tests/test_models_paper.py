@@ -1,7 +1,6 @@
 """The paper's five model families: exact parameter counts + learnability."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import FedAvgConfig, FederatedTrainer, make_eval_fn
 from repro.data import make_image_classification, partition_iid

@@ -11,7 +11,6 @@ be silently unreachable through the wrapper) and the ``specs/`` JSON
 registry staying in sync with the Python presets.
 """
 import dataclasses
-import json
 from pathlib import Path
 
 import jax

@@ -28,7 +28,6 @@ from repro.core import (
     FedSGD,
     RoundEngine,
     fedsgd_config,
-    identity_codec,
     make_eval_fn,
     quantize_codec,
     resolve_strategy,

@@ -5,10 +5,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
-from repro.configs.base import MLAConfig, ModelConfig, MoEConfig, SSMConfig, reduced
+from repro.configs.base import ModelConfig, MoEConfig, reduced
 from repro.models.layers import (
     apply_rope,
     init_mla_cache,

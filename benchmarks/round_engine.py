@@ -85,11 +85,37 @@ def _bench_engine(model, params, clients, cfg, rounds, model_kind):
     return per_round, eng.num_compilations
 
 
+def _rss_mb() -> float:
+    """Resident set size of this process in MB (VmRSS, Linux)."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmRSS:"):
+                    return int(line.split()[1]) / 1024.0
+    except OSError:
+        pass
+    return float("nan")
+
+
+def _synth_clients(K, n_per, d, seed=0):
+    """Yield K equal-size synthetic clients one at a time — the population
+    never exists in host RAM at once, which is the whole point of the
+    streamed-pool rows below."""
+    rng = np.random.default_rng(seed)
+    for _ in range(K):
+        yield (
+            (rng.standard_normal((n_per, d), dtype=np.float32) * 0.1),
+            rng.integers(0, 5, n_per).astype(np.int32),
+        )
+
+
 def scaling(quick: bool = True) -> None:
-    """Device-count scaling column for the cohort-sharded engine: per-round
-    wall time of the SAME unbalanced population at D = 1, 2, 4, ... up to
-    however many devices the backend exposes, plain and quantize-codec
-    paths. On CPU, force a device count before any jax import::
+    """Two scaling axes for the engine.
+
+    Device-count column (cohort-sharded engine): per-round wall time of the
+    SAME unbalanced population at D = 1, 2, 4, ... up to however many
+    devices the backend exposes, plain and quantize-codec paths. On CPU,
+    force a device count before any jax import::
 
         XLA_FLAGS=--xla_force_host_platform_device_count=8 \
             PYTHONPATH=src python -m benchmarks.run --only round_engine_scaling
@@ -98,6 +124,17 @@ def scaling(quick: bool = True) -> None:
     forced-host-device CPU backend the "devices" share the same cores, so
     expect layout overhead rather than speedup there — the column exists to
     pin the scaling MACHINERY; real scaling needs real chips).
+
+    Population column (out-of-core pools, docs/engine.md "Population store
+    & staging pipeline"): K = 10^3 runs the superstep lane on both
+    backends and gates the streamed pool within 1.3x of device-resident —
+    the double-buffered prefetch must hide the host gather+stage. Then a
+    K = 10^5 (quick; 10^6 in --full) population is built straight from a
+    generator into disk shards and run streamed-only; the gate holds the
+    process RSS GROWTH under 256 MB while the pool's on-disk footprint is
+    larger than that — i.e. the population demonstrably never became
+    host-resident. A device-resident estimate row shows what the packed
+    pool would have allocated. Both gates raise on a miss.
     """
     from repro.core.compression import quantize_codec
     from repro.launch.mesh import make_client_mesh
@@ -130,6 +167,89 @@ def scaling(quick: bool = True) -> None:
             emit(f"round_engine/scaling/{codec_name}/D{d}", per_round * 1e6,
                  f"speedup_vs_D1={base_t / max(per_round, 1e-12):.2f}x;"
                  f"compilations={eng.num_compilations}")
+    _population_scaling(quick)
+
+
+def _population_scaling(quick: bool) -> None:
+    from repro.data.pool import StreamedClientPool
+
+    # -- K = 10^3: streamed must stay within 1.3x of device-resident ------
+    pop_model = mnist_2nn(n_classes=5, d_in=32)
+    pop_params = pop_model.init(jax.random.PRNGKey(1))
+    pop_cfg = FedAvgConfig(C=0.02, E=1, B=8, lr=0.1, seed=0)  # m = 20
+    k1 = list(_synth_clients(1000, 8, 32, seed=0))
+    R = 5
+    pop_rounds = 20 if quick else 100
+    trials = 3 if quick else 5
+    times = {}
+    for kind in ("device", "streamed"):
+        eng = RoundEngine(pop_model.loss, pop_params, k1, pop_cfg,
+                          pool=kind, pool_shard_clients=256,
+                          device_sampling=True)
+        eng.run(R, rounds_per_step=R)  # warm the superstep executable
+        best = float("inf")
+        for _ in range(trials):
+            t0 = time.perf_counter()
+            eng.run(pop_rounds, rounds_per_step=R)
+            best = min(best, (time.perf_counter() - t0) / pop_rounds)
+        times[kind] = best
+        emit(f"round_engine/scaling/pool/K1e3/{kind}", best * 1e6,
+             f"superstep_R{R};compilations={eng.num_compilations}")
+        # eager-dispatch row, informational (no prefetch overlap to hide
+        # the host gather, so this is the streamed path's worst case)
+        eng.round()
+        t0 = time.perf_counter()
+        for _ in range(pop_rounds):
+            jax.block_until_ready(eng.round()["loss"])
+        emit(f"round_engine/scaling/pool/K1e3/{kind}_eager",
+             (time.perf_counter() - t0) / pop_rounds * 1e6, "informational")
+    del k1
+    ratio = times["streamed"] / max(times["device"], 1e-12)
+    ok_ratio = ratio <= 1.3
+    emit("round_engine/scaling/pool/K1e3/gate", ratio,
+         f"streamed_vs_device={ratio:.2f}x;required<=1.30x;"
+         f"{'pass' if ok_ratio else 'FAIL'}")
+
+    # -- K = 10^5 (10^6 full): generator -> disk shards, bounded RSS ------
+    K = 10**5 if quick else 10**6
+    n_per, d = 16, 64
+    rss0 = _rss_mb()
+    pool = StreamedClientPool.from_generator(
+        _synth_clients(K, n_per, d, seed=1), 16, shard_clients=4096
+    )
+    big_model = mnist_2nn(n_classes=5, d_in=d)
+    big_params = big_model.init(jax.random.PRNGKey(2))
+    big_cfg = FedAvgConfig(C=20.0 / K, E=1, B=16, lr=0.1, seed=0)  # m = 20
+    eng = RoundEngine(big_model.loss, big_params, None, big_cfg, pool=pool,
+                      device_sampling=True)
+    t0 = time.perf_counter()
+    eng.run(10, rounds_per_step=5)
+    per_round = (time.perf_counter() - t0) / 10
+    rss_growth = _rss_mb() - rss0
+    disk_mb = pool.nbytes_on_disk() / 1e6
+    est_mb = pool.estimated_device_nbytes() / 1e6
+    del eng, pool  # finalizer reclaims the on-disk shards promptly
+    emit(f"round_engine/scaling/pool/K{K}/streamed", per_round * 1e6,
+         f"superstep_R5;disk_mb={disk_mb:.0f};rss_growth_mb={rss_growth:.0f}")
+    emit(f"round_engine/scaling/pool/K{K}/device_estimate_mb", est_mb,
+         "what pack_clients would allocate — the budget guard's input")
+    rss_bound = 256.0
+    ok_rss = (rss_growth < rss_bound) and (disk_mb > rss_bound)
+    emit(f"round_engine/scaling/pool/K{K}/gate", rss_growth,
+         f"rss_growth_mb={rss_growth:.0f};required<{rss_bound:.0f}"
+         f"(pool={disk_mb:.0f}mb_on_disk);{'pass' if ok_rss else 'FAIL'}")
+    if not ok_ratio:
+        raise AssertionError(
+            f"population scaling gate: streamed pool must run within 1.3x "
+            f"of device-resident at K=10^3 on the superstep lane, got "
+            f"{ratio:.2f}x"
+        )
+    if not ok_rss:
+        raise AssertionError(
+            f"population scaling gate: K={K} streamed run must keep RSS "
+            f"growth under {rss_bound:.0f} MB with the pool "
+            f"({disk_mb:.0f} MB) on disk, got {rss_growth:.0f} MB"
+        )
 
 
 def _overhead_bound_2nn():
@@ -160,6 +280,15 @@ def superstep(quick: bool = True) -> None:
     min over a few trials to shrug off CI-box noise; each R gets a fresh
     engine so the compile-count column stays per-configuration.
 
+    The q8 column is COMPUTE-bound, not dispatch-bound: the threefry draw
+    for stochastic rounding, the per-chunk range scans, and the
+    interpret-mode aggregate cost ~ms/round regardless of R, so its
+    amortization plateaus by R=5 and box noise can make R=20 read slower
+    than R=5 (seen as a non-monotone column in BENCH_pr7). The ratio row
+    pins that: q8 R20/R5 must stay <= 1.25, loose enough for noise, tight
+    enough that real per-round work creeping back into the scan (a
+    key-split leak, a lost donation) still trips the gate.
+
         PYTHONPATH=src python -m benchmarks.run --only round_engine_superstep
     """
     from repro.core.compression import quantize_codec
@@ -168,9 +297,8 @@ def superstep(quick: bool = True) -> None:
     params = model.init(jax.random.PRNGKey(0))
     rounds = 20 if quick else 100
     trials = 5 if quick else 7
-    gate = None
+    bests = {}
     for codec_name, codec in [("plain", None), ("q8", quantize_codec(8, chunk=256))]:
-        base_t = None
         for R in (1, 5, 20):
             eng = RoundEngine(model.loss, params, clients, cfg, codec=codec,
                               device_sampling=True)
@@ -180,20 +308,28 @@ def superstep(quick: bool = True) -> None:
                 t0 = time.perf_counter()
                 eng.run(rounds, rounds_per_step=R)
                 best = min(best, (time.perf_counter() - t0) / rounds)
-            base_t = best if R == 1 else base_t
-            speedup = base_t / max(best, 1e-12)
+            bests[(codec_name, R)] = best
+            speedup = bests[(codec_name, 1)] / max(best, 1e-12)
             emit(f"round_engine/superstep/2nn/{codec_name}/R{R}", best * 1e6,
                  f"speedup_vs_R1={speedup:.2f}x;"
                  f"compilations={eng.num_compilations}")
-            if codec_name == "plain" and R == 20:
-                gate = speedup
-    ok = gate is not None and gate >= 2.0
+    gate = bests[("plain", 1)] / max(bests[("plain", 20)], 1e-12)
+    ok = gate >= 2.0
     emit("round_engine/superstep/gate", 0.0,
          f"R20_plain={gate:.2f}x;required=2.00x;{'pass' if ok else 'FAIL'}")
+    q8_ratio = bests[("q8", 20)] / max(bests[("q8", 5)], 1e-12)
+    ok_q8 = q8_ratio <= 1.25
+    emit("round_engine/superstep/q8_r20_vs_r5", q8_ratio,
+         f"required<=1.25;{'pass' if ok_q8 else 'FAIL'}")
     if not ok:
         raise AssertionError(
             f"superstep gate: R=20 must amortize per-round dispatch >=2x on "
             f"the overhead-bound 2nn config, got {gate:.2f}x"
+        )
+    if not ok_q8:
+        raise AssertionError(
+            f"superstep q8 gate: the compute-bound q8 column must hold "
+            f"R20 <= 1.25x R5 per round, got {q8_ratio:.2f}x"
         )
 
 

@@ -94,7 +94,13 @@ from repro.core.fedavg import (
 )
 from repro.core.strategies import ServerStrategy, resolve_strategy
 from repro.analysis.guards import sanctioned_staging
-from repro.data.batching import pack_clients, pad_cohort, pad_cohort_device
+from repro.data.batching import (
+    estimate_pool_nbytes,
+    pack_clients,
+    pad_cohort,
+    pad_cohort_device,
+)
+from repro.data.pool import StreamedClientPool, device_pool_budget
 from repro.kernels.ops import default_interpret
 
 
@@ -350,6 +356,10 @@ class RoundEngine:
         rounds_per_step: Optional[int] = None,
         latency=None,
         async_config=None,
+        pool="auto",
+        pool_shard_clients: int = 1024,
+        pool_dir=None,
+        prefetch: int = 1,
     ):
         self.loss_fn = loss_fn
         # Private copy: the round executables donate the params buffer
@@ -388,7 +398,109 @@ class RoundEngine:
             )
         self._shards = int(mesh.shape[client_axis]) if mesh is not None else 1
 
-        packed = pack_clients(client_data, cfg.B)
+        # -- population backend (docs/engine.md "Population store") --------
+        # "device" is the historical fast path: pack once, gather on
+        # device. "streamed" keeps the population on host disk
+        # (data.pool.StreamedClientPool) and stages each sampled cohort
+        # host->device through sanctioned_staging, double-buffered so
+        # cohort R+1 stages while R computes. "auto" picks by comparing the
+        # packed-pool estimate against device_pool_budget().
+        self._prefetch_depth = int(prefetch)
+        if self._prefetch_depth < 0:
+            raise ValueError(f"prefetch must be >= 0, got {prefetch}")
+        self._prefetched = None
+        spool = None
+        if isinstance(pool, StreamedClientPool):
+            spool, pool_kind = pool, "streamed"
+        elif pool in ("auto", "device", "streamed"):
+            pool_kind = pool
+        else:
+            raise ValueError(
+                "pool must be 'auto', 'device', 'streamed', or a "
+                f"StreamedClientPool instance, got {pool!r}"
+            )
+        if pool_kind == "auto":
+            if not len(client_data):
+                pool_kind = "device"  # pack_clients owns the empty error
+            else:
+                x0, y0 = client_data[0]
+                est = estimate_pool_nbytes(
+                    np.asarray([len(x) for x, _ in client_data], np.int64),
+                    cfg.B, x0.shape[1:], x0.dtype.itemsize,
+                    y0.shape[1:] if y0 is not None else None,
+                    y0.dtype.itemsize if y0 is not None else 0,
+                )
+                pool_kind = (
+                    "device" if est <= device_pool_budget() else "streamed"
+                )
+        self.pool_kind = pool_kind
+        if pool_kind == "streamed":
+            if mesh is not None:
+                raise ValueError(
+                    "pool='streamed' is incompatible with mesh= cohort "
+                    "sharding: streamed cohorts are staged host->device "
+                    "per round, while shard_map needs the device-resident "
+                    "pool replicated across the mesh — shard with "
+                    "pool='device', or stream unsharded"
+                )
+            if latency is not None or async_config is not None:
+                raise ValueError(
+                    "pool='streamed' supports the sync round and superstep "
+                    "lanes only: the latency/async schedulers dispatch "
+                    "against the device-resident pool directly"
+                )
+            if spool is None:
+                spool = StreamedClientPool.build(
+                    client_data, cfg.B,
+                    shard_clients=pool_shard_clients, root=pool_dir,
+                )
+            elif spool.requested_batch_size != cfg.B:
+                raise ValueError(
+                    "streamed pool was built with batch_size="
+                    f"{spool.requested_batch_size} but cfg.B={cfg.B} — its "
+                    "step schedule would not match this engine's"
+                )
+            self.pool = spool
+            self.packed = spool.meta
+            self._x = self._y = self._counts = self._spe = None
+            self._rep = None
+            self._m = max(int(round(cfg.C * spool.num_clients)), 1)
+            shape_kw = dict(
+                E=cfg.E,
+                spe=self.packed.max_real_steps_per_epoch,
+                B=self.packed.batch_size,
+                has_labels=spool.has_labels,
+                codec=codec,
+                strategy=self.strategy,
+                interpret=self.interpret,
+                accum_dtype=jnp.dtype(accum_dtype),
+            )
+            # Donate the params/strategy carries like the device lane.
+            # (The staged cohort buffers are dead after their round too,
+            # but no output shares their shape, so donating them buys
+            # nothing — XLA frees them at the end of the executable.)
+            self._staged_round_jit = jax.jit(
+                partial(_engine_round_staged, loss_fn, **shape_kw),
+                donate_argnums=(0, 1),
+            )
+            self._staged_superstep_jit = jax.jit(
+                partial(_engine_superstep_staged, loss_fn, **shape_kw),
+                donate_argnums=(0, 1),
+            )
+            self._executables = [
+                self._staged_round_jit, self._staged_superstep_jit
+            ]
+            self.latency = None
+            self.async_config = None
+            return
+        self.pool = None
+
+        # Budget-guarded: a population too large for the device pool fails
+        # HERE with a message naming pool='streamed', not as an opaque
+        # XLA OOM after minutes of packing (REPRO_DEVICE_POOL_BUDGET
+        # overrides the budget).
+        packed = pack_clients(client_data, cfg.B,
+                              max_bytes=device_pool_budget())
         self._x = jnp.asarray(packed.x)
         self._y = jnp.asarray(packed.y) if packed.y is not None else None
         self._counts = jnp.asarray(packed.counts)
@@ -476,6 +588,7 @@ class RoundEngine:
         self._superstep_body = sbody
         self._round_jit = jax.jit(body, donate_argnums=(0, 1))
         self._superstep_jit = jax.jit(sbody, donate_argnums=(0, 1, 2))
+        self._executables = [self._round_jit, self._superstep_jit]
 
         # -- straggler simulation / buffered-async lane (core.scheduler) --
         # ``latency`` is a core.latency.LatencyModel driving the simulated
@@ -600,6 +713,9 @@ class RoundEngine:
             rounds_per_step=ex.rounds_per_step,
             latency=latency,
             async_config=async_config,
+            pool=getattr(ex, "pool", "auto"),
+            pool_shard_clients=getattr(ex, "pool_shard_clients", 1024),
+            prefetch=getattr(ex, "prefetch", 1),
         )
 
     # -- introspection ----------------------------------------------------
@@ -612,10 +728,11 @@ class RoundEngine:
     def num_compilations(self) -> int:
         """Distinct executables behind the round loop — the jax.jit cache
         sizes of the per-round executable and the superstep (scan-of-R)
-        executable combined. A run that mixes one superstep length with
-        per-round calls stays at 2; a ragged final chunk (n_rounds not a
-        multiple of R) adds one scan-of-remainder executable."""
-        return self._round_jit._cache_size() + self._superstep_jit._cache_size()
+        executable combined (their staged twins on the streamed-pool
+        lane). A run that mixes one superstep length with per-round calls
+        stays at 2; a ragged final chunk (n_rounds not a multiple of R)
+        adds one scan-of-remainder executable."""
+        return sum(f._cache_size() for f in self._executables)
 
     def lr_at(self, rnd: int) -> float:
         """Client lr for round ``rnd``. A callable ``cfg.lr`` is a complete
@@ -668,8 +785,156 @@ class RoundEngine:
                 ids, valid, key = jax.device_put((ids, valid, key), self._rep)
             return ids, valid, key, lr
 
+    # -- streamed-pool staging pipeline ------------------------------------
+    #
+    # The streamed lane replaces the on-device pool gather with a host
+    # shard read + an explicit, sanctioned host->device staging of just
+    # the sampled cohort. Double buffering: after dispatching round R's
+    # executable (async dispatch returns immediately), the host prepares
+    # and stages round R+1's cohort while R computes. Preparing consumes
+    # the sampling RNG ahead of the played rounds, so every prepared
+    # bundle carries a snapshot of the stream state taken BEFORE its
+    # draw; save()/restore() (and any shape mismatch) discard the pending
+    # bundle and rewind to that snapshot, keeping checkpoints bit-for-bit
+    # identical to an unprefetched — and to a device-pool — run.
+
+    def _rng_snapshot(self):
+        import copy
+
+        return (copy.deepcopy(self.rng.bit_generator.state), self.sample_key)
+
+    def _discard_prefetch(self):
+        """Drop a staged-but-unplayed cohort and rewind the sampling
+        stream to the state before it was drawn. Exact because prepares
+        are sequential: nothing consumed the stream since the snapshot."""
+        if self._prefetched is None:
+            return
+        state, key = self._prefetched["rng"]
+        self.rng.bit_generator.state = state
+        self.sample_key = key
+        self._prefetched = None
+
+    def _take_prefetch(self, kind: str, for_round: int, r=None):
+        p = self._prefetched
+        if (
+            p is not None and p["kind"] == kind
+            and p["for_round"] == for_round and p.get("r") == r
+        ):
+            self._prefetched = None
+            return p
+        self._discard_prefetch()
+        return None
+
+    def _sample_ids_host(self):
+        """One cohort draw with host-visible ids, advancing whichever
+        sampling stream this engine runs — the numpy stream verbatim, or
+        the device stream by replaying the exact split/draw the
+        device-pool lanes trace (same keys in, same uint32 ops, so the
+        realized cohorts and data keys are bit-identical)."""
+        if self.device_sampling:
+            k_cohort, k_data, k_next = jax.random.split(self.sample_key, 3)
+            self.sample_key = k_next
+            with sanctioned_staging():
+                # Same bounded staging as _next_round_inputs: uniform's
+                # weak-typed minval/maxval scalars.
+                ids_dev = sample_clients_device(
+                    k_cohort, self.num_clients, self._m
+                )
+            return np.asarray(jax.device_get(ids_dev)), k_data
+        ids = np.asarray(
+            sample_clients(self.rng, self.num_clients, self.cfg.C)
+        )
+        with sanctioned_staging():
+            key = jax.random.PRNGKey(int(self.rng.integers(2**31)))
+        return ids, key
+
+    def _prepare_round(self, for_round: int):
+        """Draw, shard-read, and stage one round's cohort."""
+        snap = self._rng_snapshot()
+        ids, key = self._sample_ids_host()
+        x, y = self.pool.gather(ids)
+        w = self.pool.counts[ids]
+        spe_k = self.pool.steps_per_epoch[ids]
+        with sanctioned_staging():
+            dev = (
+                jax.device_put(x),
+                jax.device_put(y) if y is not None else None,
+                jax.device_put(w),
+                jax.device_put(spe_k),
+                key,
+                jnp.float32(self.lr_at(for_round)),
+            )
+        return {"kind": "round", "for_round": for_round, "dev": dev,
+                "rng": snap}
+
+    def _prepare_chunk(self, for_round: int, r: int):
+        """Draw, shard-read, and stage a whole superstep's R cohorts —
+        the scan seam: ids for all R rounds are sampled up front (the
+        host replays the superstep carry's key-split chain), so one
+        staging covers R rounds and overlaps the previous chunk's
+        compute."""
+        snap = self._rng_snapshot()
+        xs, ys, ws, spes, keys = [], [], [], [], []
+        for i in range(r):
+            ids, key = self._sample_ids_host()
+            x, y = self.pool.gather(ids)
+            xs.append(x)
+            ys.append(y)
+            ws.append(self.pool.counts[ids])
+            spes.append(self.pool.steps_per_epoch[ids])
+            keys.append(key)
+        lrs = np.asarray(
+            [self.lr_at(for_round + i) for i in range(r)], np.float32
+        )
+        with sanctioned_staging():
+            dev = (
+                jax.device_put(np.stack(xs)),
+                jax.device_put(np.stack(ys)) if ys[0] is not None else None,
+                jax.device_put(np.stack(ws)),
+                jax.device_put(np.stack(spes)),
+                jnp.stack(keys),
+                jax.device_put(lrs),
+            )
+        return {"kind": "chunk", "for_round": for_round, "r": r, "dev": dev,
+                "rng": snap}
+
+    def _round_streamed(self) -> Dict[str, float]:
+        b = (
+            self._take_prefetch("round", self.round_idx)
+            or self._prepare_round(self.round_idx)
+        )
+        x, y, w, spe_k, key, lr = b["dev"]
+        self.params, self.outer_state, loss = self._staged_round_jit(
+            self.params, self.outer_state, x, y, w, spe_k, key, lr
+        )
+        self.round_idx += 1
+        if self._prefetch_depth > 0:
+            # Double buffer: the dispatch above returned without syncing,
+            # so this shard read + staging overlaps the round's compute.
+            self._prefetched = self._prepare_round(self.round_idx)
+        return {"loss": loss}
+
+    def _superstep_streamed(self, r: int) -> np.ndarray:
+        b = (
+            self._take_prefetch("chunk", self.round_idx, r)
+            or self._prepare_chunk(self.round_idx, r)
+        )
+        xs, ys, ws, spes, keys, lrs = b["dev"]
+        self.params, self.outer_state, losses = self._staged_superstep_jit(
+            self.params, self.outer_state, xs, ys, ws, spes, keys, lrs
+        )
+        self.round_idx += r
+        if self._prefetch_depth > 0:
+            # Stage the next chunk (same R — _run_supersteps' steady
+            # state; a ragged final chunk just discards and rewinds)
+            # while this one computes, then sync on this chunk's losses.
+            self._prefetched = self._prepare_chunk(self.round_idx, r)
+        return np.asarray(jax.device_get(losses))
+
     def round(self) -> Dict[str, float]:
         """One synchronous round; returns {'loss': ...}."""
+        if self.pool_kind == "streamed":
+            return self._round_streamed()
         ids, valid, key, lr = self._next_round_inputs()
         self.params, self.outer_state, loss = self._round_jit(
             self.params, self.outer_state, self._x, self._y, self._counts,
@@ -710,7 +975,11 @@ class RoundEngine:
         """Advance r rounds in ONE dispatch; returns the (r,) per-round
         losses, synced. The lr schedule is precomputed host-side (handles
         both scalar-decay and callable cfg.lr), the cohort key rides in the
-        scan carry, and params + key buffers are donated."""
+        scan carry, and params + key buffers are donated. On the streamed
+        lane the scan consumes pre-staged cohorts instead (the host
+        replays the key chain and stages all R cohorts up front)."""
+        if self.pool_kind == "streamed":
+            return self._superstep_streamed(r)
         with sanctioned_staging():
             lrs = jnp.asarray(
                 [self.lr_at(self.round_idx + i) for i in range(r)], jnp.float32
@@ -847,6 +1116,11 @@ class RoundEngine:
 
         from repro.checkpoint.io import save_checkpoint
 
+        # A staged-but-unplayed prefetched cohort has consumed sampling
+        # randomness the checkpoint must NOT record as spent: discard it
+        # and rewind, so the saved stream state matches an unprefetched
+        # (and a device-pool) run bit-for-bit.
+        self._discard_prefetch()
         return save_checkpoint(
             ckpt_dir,
             {"params": self.params, "strategy_state": self.outer_state},
@@ -875,6 +1149,9 @@ class RoundEngine:
             restore_checkpoint,
         )
 
+        # The pending prefetch (if any) was drawn for the PRE-restore
+        # stream position; discard and rewind before any state changes.
+        self._discard_prefetch()
         # Pin the step ONCE: with step=None, letting peek_metadata and
         # restore_checkpoint each resolve "latest" independently races a
         # concurrent saver — the guards could validate step N while the
@@ -961,6 +1238,19 @@ class RoundEngine:
         """Assemble (batches, step_mask, weights) exactly as the jitted round
         does — for equivalence tests and the legacy-vs-engine benchmark.
         Always the UNSHARDED view (global slot 0 onward)."""
+        if self.pool_kind == "streamed":
+            ids = np.asarray(ids)
+            x, y = self.pool.gather(ids)
+            with sanctioned_staging():
+                return _assemble_cohort_batches(
+                    jnp.asarray(x),
+                    jnp.asarray(y) if y is not None else None,
+                    jnp.asarray(self.pool.counts[ids]),
+                    jnp.asarray(self.pool.steps_per_epoch[ids]),
+                    key,
+                    E=self.cfg.E, spe=self.packed.max_real_steps_per_epoch,
+                    B=self.packed.batch_size, has_labels=y is not None,
+                )
         return _assemble_batches(
             self._x, self._y, self._counts, self._spe,
             jnp.asarray(ids, jnp.int32), key,
@@ -974,12 +1264,26 @@ class RoundEngine:
 
 def _assemble_batches(px, py, counts, spe_arr, ids, key, *, E, spe, B,
                       has_labels, slot0=0):
-    m = ids.shape[0]
-    n_pad = px.shape[1]
+    """Device-pool batch assembly: on-device pool gather, then the shared
+    cohort half below. The streamed lane skips the gather (its cohorts
+    arrive pre-staged) and enters at :func:`_assemble_cohort_batches` — the
+    seam that makes the two backends bit-for-bit identical: a gather copies
+    rows exactly, so from the cohort on both lanes run the same ops on the
+    same bytes."""
     xs = jnp.take(px, ids, axis=0)                       # (m, n_pad, ...)
     ys = jnp.take(py, ids, axis=0) if has_labels else None
     w = jnp.take(counts, ids)                            # (m,)
     spe_k = jnp.take(spe_arr, ids)                       # (m,) real steps/epoch
+    return _assemble_cohort_batches(
+        xs, ys, w, spe_k, key, E=E, spe=spe, B=B, has_labels=has_labels,
+        slot0=slot0,
+    )
+
+
+def _assemble_cohort_batches(xs, ys, w, spe_k, key, *, E, spe, B,
+                             has_labels, slot0=0):
+    m = xs.shape[0]
+    n_pad = xs.shape[1]
     # One fresh draw order per (client, epoch), the on-device analogue of
     # per-epoch reshuffling in ClientUpdate. Keying the sort by u + 2*[row
     # is padding] puts a uniform permutation of the client's n_k REAL rows
@@ -1004,7 +1308,7 @@ def _assemble_batches(px, py, counts, spe_arr, ids, key, *, E, spe, B,
             lambda e: jax.random.fold_in(jax.random.fold_in(key, s), e)
         )(epochs)
     )(slots)                                             # (m, E) keys
-    n_real = jnp.take(counts, ids).astype(jnp.int32)     # (m,)
+    n_real = w.astype(jnp.int32)                         # (m,) == counts[ids]
 
     def draw_order(k, nk):
         u = jax.random.uniform(k, (n_pad,))
@@ -1044,6 +1348,20 @@ def _engine_round(
     # Ghost cohort-padding clients (valid == 0) keep a real row gather (id
     # 0) but zero weight, so they vanish from the aggregate and the loss.
     w = w * valid
+    return _apply_round_step(
+        loss_fn, params, outer, batch, mask, w, key, lr, codec=codec,
+        strategy=strategy, interpret=interpret, accum_dtype=accum_dtype,
+        axis_name=axis_name,
+    )
+
+
+def _apply_round_step(
+    loss_fn, params, outer, batch, mask, w, key, lr,
+    *, codec, strategy, interpret, accum_dtype, axis_name=None,
+):
+    """The server half every lane shares from the assembled cohort on:
+    plain or compressed round step, strategy threading, loss metric. One
+    definition so the device and streamed pool backends cannot drift."""
     if codec is None:
         step = build_simulation_round_step(
             loss_fn, interpret=interpret, accum_dtype=accum_dtype,
@@ -1065,6 +1383,53 @@ def _engine_round(
         RoundBatch(batch, mask, w, lr=lr, key=codec_key),
     )
     return state.params, state.outer_state, metrics["loss"]
+
+
+def _engine_round_staged(
+    loss_fn, params, outer, cx, cy, w, spe_k, key, lr,
+    *, E, spe, B, has_labels, codec, strategy, interpret, accum_dtype,
+):
+    """The streamed-pool round body: identical to :func:`_engine_round`
+    from the cohort on, but the (m, n_pad, ...) rows arrive pre-gathered
+    (host shard reads staged through ``sanctioned_staging``) instead of via
+    the on-device pool take — the population never touches device memory.
+    No ``valid`` mask: the streamed lane is unsharded, so cohorts are never
+    ghost-padded (and the device lane's ``w * 1.0`` is bitwise ``w``)."""
+    batch, mask, w = _assemble_cohort_batches(
+        cx, cy, w, spe_k, key, E=E, spe=spe, B=B, has_labels=has_labels,
+    )
+    return _apply_round_step(
+        loss_fn, params, outer, batch, mask, w, key, lr, codec=codec,
+        strategy=strategy, interpret=interpret, accum_dtype=accum_dtype,
+    )
+
+
+def _engine_superstep_staged(
+    loss_fn, params, outer, cxs, cys, ws, spes, keys, lrs,
+    *, E, spe, B, has_labels, codec, strategy, interpret, accum_dtype,
+):
+    """The streamed twin of :func:`_engine_superstep`: R pre-staged cohorts
+    scanned in one donated executable. The cohort draw already happened on
+    the host (``_prepare_chunk`` replays the superstep carry's exact
+    key-split chain eagerly), so the scan consumes (R, m, ...) staged
+    arrays and (R, 2) per-round data keys instead of drawing ids inside
+    the scan — same keys, same cohort bytes, same per-round body, hence
+    bit-for-bit the device superstep's results."""
+
+    def one_round(carry, inp):
+        p, o = carry
+        cx, cy, w, spe_k, key, lr = inp
+        new_p, new_o, loss = _engine_round_staged(
+            loss_fn, p, o, cx, cy, w, spe_k, key, lr,
+            E=E, spe=spe, B=B, has_labels=has_labels, codec=codec,
+            strategy=strategy, interpret=interpret, accum_dtype=accum_dtype,
+        )
+        return (new_p, new_o), loss
+
+    (params, outer), losses = jax.lax.scan(
+        one_round, (params, outer), (cxs, cys, ws, spes, keys, lrs)
+    )
+    return params, outer, losses
 
 
 def _engine_superstep(

@@ -10,4 +10,16 @@ from repro.data.partition import (
     partition_unbalanced,
     FederatedDataset,
 )
-from repro.data.batching import batch_iterator, client_epoch_batches, pad_cohort
+from repro.data.batching import (
+    batch_iterator,
+    client_epoch_batches,
+    estimate_pool_nbytes,
+    pad_cohort,
+    pool_metadata,
+)
+from repro.data.pool import (
+    ClientPool,
+    DeviceClientPool,
+    StreamedClientPool,
+    device_pool_budget,
+)

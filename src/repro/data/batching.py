@@ -128,23 +128,15 @@ def _next_pow2(v: int) -> int:
     return 1 << (int(v) - 1).bit_length() if v > 0 else 1
 
 
-def pack_clients(
-    client_data: Sequence[Tuple[np.ndarray, Optional[np.ndarray]]],
-    batch_size: Optional[int],
-) -> PackedClients:
-    """Pack per-client (x, y) arrays into one statically-shaped population.
-
-    Shape-bucket scheme: each client's per-epoch step count
-    max(ceil(n_k / B), 1) is rounded up to the next power of two, giving a small
-    set of diagnostic shape classes. Storage uses one common pool of
-    ceil(max n_k / B) * B rows so one executable serves every sampled
-    cohort; per-client real step counts ride along for masking. For B=None
-    (FedSGD's full batch) there is a single bucket: n_pad = max n_k and one
-    step per epoch over the whole pool.
-    """
-    if not len(client_data):
-        raise ValueError("pack_clients needs at least one client")
-    counts = np.asarray([len(x) for x, _ in client_data], np.int64)
+def pool_metadata(counts: np.ndarray, batch_size: Optional[int]) -> PackedClients:
+    """The data-less half of :func:`pack_clients`: counts, the per-client
+    step schedule, and the diagnostic shape buckets, as a ``PackedClients``
+    with ``x = y = None``. Shared by the device pack below and the
+    host/disk-backed ``data.pool.StreamedClientPool``, so both backends
+    mask and weight identically by construction."""
+    counts = np.asarray(counts, np.int64)
+    if not len(counts):
+        raise ValueError("need at least one client")
     if batch_size is None:
         steps = np.ones(len(counts), np.int32)
         B = int(counts.max())
@@ -165,7 +157,82 @@ def pack_clients(
         # the pool shape is fixed at pack time either way, and every padded
         # step costs real (masked) compute.
         n_pad = int(np.ceil(counts.max() / B)) * B
+    return PackedClients(
+        x=None,
+        y=None,
+        counts=counts.astype(np.float32),
+        steps_per_epoch=steps,
+        batch_size=B,
+        max_steps_per_epoch=n_pad // B,
+        bucket_sizes=bucket_sizes,
+        bucket_of=buckets.astype(np.int64),
+    )
+
+
+def estimate_pool_nbytes(
+    counts: np.ndarray,
+    batch_size: Optional[int],
+    x_tail: Tuple[int, ...],
+    x_itemsize: int,
+    y_tail: Optional[Tuple[int, ...]] = None,
+    y_itemsize: int = 0,
+) -> int:
+    """Bytes the device-resident (K, n_pad, ...) pack would allocate —
+    computable from counts and per-example shapes alone, BEFORE any array
+    exists. This is what the ``pack_clients`` budget guard and the
+    ``pool="auto"`` backend selection compare against
+    ``data.pool.device_pool_budget()``."""
+    meta = pool_metadata(counts, batch_size)
+    n_pad = meta.max_steps_per_epoch * meta.batch_size
+    per_row = int(np.prod(x_tail, dtype=np.int64)) * int(x_itemsize)
+    if y_tail is not None:
+        per_row += int(np.prod(y_tail, dtype=np.int64)) * int(y_itemsize)
+    return meta.num_clients * n_pad * per_row
+
+
+def pack_clients(
+    client_data: Sequence[Tuple[np.ndarray, Optional[np.ndarray]]],
+    batch_size: Optional[int],
+    *,
+    max_bytes: Optional[int] = None,
+) -> PackedClients:
+    """Pack per-client (x, y) arrays into one statically-shaped population.
+
+    Shape-bucket scheme: each client's per-epoch step count
+    max(ceil(n_k / B), 1) is rounded up to the next power of two, giving a small
+    set of diagnostic shape classes. Storage uses one common pool of
+    ceil(max n_k / B) * B rows so one executable serves every sampled
+    cohort; per-client real step counts ride along for masking. For B=None
+    (FedSGD's full batch) there is a single bucket: n_pad = max n_k and one
+    step per epoch over the whole pool.
+
+    ``max_bytes``: refuse populations whose padded pool would exceed this
+    budget, BEFORE allocating anything — the failure mode it replaces is an
+    opaque host/XLA OOM minutes into setup. The fix it names is real:
+    ``RoundEngine(pool="streamed")`` bounds the population by host disk
+    instead of device memory (``data.pool.StreamedClientPool``).
+    """
+    if not len(client_data):
+        raise ValueError("pack_clients needs at least one client")
+    counts = np.asarray([len(x) for x, _ in client_data], np.int64)
+    meta = pool_metadata(counts, batch_size)
+    n_pad = meta.max_steps_per_epoch * meta.batch_size
     x0, y0 = client_data[0]
+    if max_bytes is not None:
+        est = estimate_pool_nbytes(
+            counts, batch_size, x0.shape[1:], x0.dtype.itemsize,
+            y0.shape[1:] if y0 is not None else None,
+            y0.dtype.itemsize if y0 is not None else 0,
+        )
+        if est > max_bytes:
+            raise ValueError(
+                f"population exceeds device budget: packing {len(counts)} "
+                f"clients at n_pad={n_pad} rows would allocate ~"
+                f"{est / 1e6:.0f} MB (> budget {max_bytes / 1e6:.0f} MB). "
+                "Use pool='streamed' (RoundEngine(pool='streamed') / "
+                "ExecutionSpec(pool='streamed')) to keep the population on "
+                "host disk, or raise REPRO_DEVICE_POOL_BUDGET."
+            )
     K = len(client_data)
     xs = np.zeros((K, n_pad) + x0.shape[1:], x0.dtype)
     ys = np.zeros((K, n_pad) + y0.shape[1:], y0.dtype) if y0 is not None else None
@@ -174,16 +241,7 @@ def pack_clients(
         xs[k] = x[idx]
         if ys is not None:
             ys[k] = y[idx]
-    return PackedClients(
-        x=xs,
-        y=ys,
-        counts=counts.astype(np.float32),
-        steps_per_epoch=steps,
-        batch_size=B,
-        max_steps_per_epoch=n_pad // B,
-        bucket_sizes=bucket_sizes,
-        bucket_of=buckets.astype(np.int64),
-    )
+    return meta._replace(x=xs, y=ys)
 
 
 def pad_cohort(ids: np.ndarray, multiple: int) -> Tuple[np.ndarray, np.ndarray]:

@@ -169,13 +169,25 @@ class ExecutionSpec:
     devices, or accepts an explicit ``mesh=``); ``device_sampling`` +
     ``rounds_per_step`` select the superstep lane; ``interpret`` forces the
     Pallas interpreter (None auto-selects off-TPU); ``accum_dtype`` is the
-    aggregation accumulator dtype as a numpy dtype string."""
+    aggregation accumulator dtype as a numpy dtype string.
+
+    Population backend (docs/engine.md "Population store & staging
+    pipeline"): ``pool`` picks where the packed client population lives —
+    ``"device"`` (the resident fast path), ``"streamed"`` (host/disk
+    shards, cohorts staged per round), or ``"auto"`` (streamed only when
+    the packed pool would exceed ``data.pool.device_pool_budget()``).
+    ``pool_shard_clients`` is the streamed store's clients-per-shard;
+    ``prefetch`` enables double-buffered staging (0 disables, 1 stages the
+    next cohort/superstep chunk while the current one computes)."""
 
     mesh_axes: Optional[str] = None
     device_sampling: bool = False
     rounds_per_step: Optional[int] = None
     interpret: Optional[bool] = None
     accum_dtype: str = "float32"
+    pool: str = "auto"
+    pool_shard_clients: int = 1024
+    prefetch: int = 1
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,7 +1,8 @@
 """Runtime guard rails over the real round loop (slow lane).
 
 The contract under test, per execution lane (plain host-sampling, plain
-device-sampling, codec, superstep, and both sharded variants): a warmed
+device-sampling, codec, superstep, both sharded variants, and the
+streamed-pool round/superstep lanes): a warmed
 ``RoundEngine.run`` performs ZERO implicit host<->device transfers — all
 staging happens inside the engine's grep-able ``sanctioned_staging``
 blocks — and compiles ZERO new executables. This is the runtime twin of
@@ -64,6 +65,12 @@ LANES = {
                 dict(rounds_per_step=1)),
     "sharded-superstep": (dict(device_sampling=True, mesh="MESH"),
                           dict(rounds_per_step=3)),
+    # Streamed pool: every host->device cohort stage must flow through the
+    # engine's sanctioned_staging blocks — the double-buffered prefetch
+    # included — or the disallow guard below fires.
+    "streamed-host": (dict(pool="streamed"), dict()),
+    "streamed-superstep": (dict(pool="streamed", device_sampling=True),
+                           dict(rounds_per_step=3)),
 }
 
 

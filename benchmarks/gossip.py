@@ -1,0 +1,102 @@
+"""Convergence vs topology for the decentralized gossip lane, with wire
+accounting — the communication claim that motivates gossip at all.
+
+A C=1.0 star round moves every node's delta through the server: the
+server hotspot pays ``2 * m * N * 4`` bytes per round (m uploads + m
+downloads of the N-parameter fp32 model). A gossip node only ever talks
+to its graph neighbors: ``2 * degree * N * 4`` bytes per round, flat in
+the population size. The gated claim (CI gate, like roofline_wire and
+round_engine_async/speedup):
+
+    gossip/wire_gate  must show the ring AND the Watts–Strogatz small
+    world reaching the 2NN target accuracy within the round budget while
+    paying strictly fewer per-node wire bytes per round than the star's
+    hotspot, or the suite raises.
+
+All lanes share the data, model, init, eval fn and per-round local
+computation (C=1.0, same E/B); only the aggregation path differs — the
+star reduce vs one Metropolis–Hastings mixing step (docs/topology.md).
+The denser topology should also converge in fewer rounds than the ring
+(better spectral gap); that ordering is reported but not gated, since at
+CI scale the gap between ring and small world can be a round or two.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import clients_for, emit, mnist_setting
+from repro.core import FedAvgConfig, RoundEngine, make_eval_fn
+from repro.core.topology import TOPOLOGIES
+from repro.data import partition_iid
+from repro.models import mnist_2nn
+
+
+def _param_count(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+def main(quick=True):
+    train, test, _ = mnist_setting(quick)
+    # Gossip populations are device-resident replicas (one model per
+    # node), so the lane targets tens of nodes, not the star's hundreds.
+    n_nodes = 16 if quick else 32
+    fed = partition_iid(len(train.x), n_nodes, seed=0)
+    clients = clients_for(train, fed)
+    model = mnist_2nn()
+    params = model.init(jax.random.PRNGKey(0))
+    N = _param_count(params)
+    ev = make_eval_fn(model.apply, test.x.reshape(len(test.x), -1), test.y)
+    cfg = FedAvgConfig(C=1.0, E=1, B=50, lr=0.05, seed=0)
+    target = 0.90 if quick else 0.97
+    rounds = 30 if quick else 200
+
+    # -- the star baseline: same computation, server-routed bytes --------
+    t0 = time.time()
+    star = RoundEngine(model.loss, params, clients, cfg, eval_fn=ev)
+    hs = star.run(rounds, eval_every=1, target_acc=target)
+    star_rounds = hs.rounds_to_target(target)
+    star_bytes = 2 * n_nodes * N * 4  # server hotspot, m = n (C=1.0)
+    emit("gossip/star_c1", (time.time() - t0) * 1e6,
+         f"rounds_to_{target:.2f}={star_rounds};"
+         f"hotspot_bytes_per_round={star_bytes}")
+
+    # -- the topology grid ------------------------------------------------
+    results = {}
+    for kind in ("ring", "smallworld", "random", "full"):
+        topo = TOPOLOGIES[kind]()
+        t0 = time.time()
+        eng = RoundEngine(model.loss, params, clients, cfg, eval_fn=ev,
+                          topology=topo)
+        h = eng.run(rounds, eval_every=1, target_acc=target)
+        r = h.rounds_to_target(target)
+        deg = int(topo.degrees(n_nodes).max())
+        node_bytes = 2 * deg * N * 4
+        cons = h.records[-1].consensus
+        results[kind] = (r, node_bytes)
+        emit(f"gossip/{kind}", (time.time() - t0) * 1e6,
+             f"rounds_to_{target:.2f}={r};degree={deg};"
+             f"node_bytes_per_round={node_bytes};"
+             f"final_consensus={cons:.2e}")
+
+    # -- the gate ----------------------------------------------------------
+    misses = []
+    for kind in ("ring", "smallworld"):
+        r, node_bytes = results[kind]
+        if r is None:
+            misses.append(f"{kind} missed acc={target} in {rounds} rounds")
+        if node_bytes >= star_bytes:
+            misses.append(
+                f"{kind} pays {node_bytes} B/round >= star {star_bytes}"
+            )
+    ok = not misses
+    emit("gossip/wire_gate", 0.0,
+         f"star_hotspot={star_bytes};"
+         f"ring={results['ring'][1]};smallworld={results['smallworld'][1]};"
+         f"gate={'pass' if ok else 'MISS'}")
+    if not ok:
+        raise RuntimeError(
+            "gossip wire gate MISS: " + "; ".join(misses)
+        )

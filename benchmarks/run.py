@@ -23,6 +23,7 @@ from benchmarks import (
     async_rounds,
     compression,
     fig1_averaging,
+    gossip,
     fig3_large_E,
     kernels_bench,
     roofline_report,
@@ -49,6 +50,7 @@ SUITES = {
     "round_engine_superstep": round_engine.superstep,
     "round_engine_strategy": round_engine.strategy_overhead,
     "round_engine_async": async_rounds.main,
+    "gossip": gossip.main,
     "compression": compression.main,
 }
 

@@ -50,6 +50,18 @@ def _fmt_codec(spec):
     return c.kind
 
 
+def _fmt_topology(spec):
+    t = spec.topology
+    if t is None:
+        return "star"
+    args = ",".join(
+        f"{k}={getattr(t, k):g}"
+        for k in ("degree", "rewire", "p", "seed")
+        if getattr(t, k) is not None
+    )
+    return f"{t.kind}({args})" if args else t.kind
+
+
 def _fmt_execution(spec):
     ex = spec.execution
     parts = []
@@ -63,8 +75,8 @@ def _fmt_execution(spec):
 
 def specs_table() -> str:
     lines = [
-        "| name | model | partition | C | E | B | lr | strategy | codec | execution |",
-        "|---|---|---|---|---|---|---|---|---|---|",
+        "| name | model | partition | C | E | B | lr | strategy | codec | topology | execution |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for name in sorted(PAPER_SPECS):
         s = PAPER_SPECS[name]
@@ -76,7 +88,7 @@ def specs_table() -> str:
         lines.append(
             f"| {name} | {s.model.kind} | {part} x{s.partition.n_clients} | "
             f"{cfg.C:g} | {cfg.E} | {B} | {cfg.lr:g} | {_fmt_strategy(s)} | "
-            f"{_fmt_codec(s)} | {_fmt_execution(s)} |"
+            f"{_fmt_codec(s)} | {_fmt_topology(s)} | {_fmt_execution(s)} |"
         )
     return "\n".join(lines)
 

@@ -26,6 +26,19 @@ from repro.core.strategies import (
     strategy_from_json,
     strategy_to_json,
 )
+from repro.core.topology import (
+    TOPOLOGIES,
+    FullTopology,
+    MixingPlan,
+    RandomTopology,
+    RingTopology,
+    SmallWorldTopology,
+    Topology,
+    TorusTopology,
+    resolve_topology,
+    topology_from_json,
+    topology_to_json,
+)
 from repro.core.latency import LatencyModel
 from repro.core.scheduler import AsyncConfig, RoundScheduler
 from repro.core.compression import (

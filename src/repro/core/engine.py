@@ -92,7 +92,8 @@ from repro.core.fedavg import (
     sample_clients_device,
     server_aggregate,
 )
-from repro.core.strategies import ServerStrategy, resolve_strategy
+from repro.core.strategies import FedAvg, ServerStrategy, resolve_strategy
+from repro.core.topology import resolve_topology
 from repro.analysis.guards import sanctioned_staging
 from repro.data.batching import (
     estimate_pool_nbytes,
@@ -101,7 +102,9 @@ from repro.data.batching import (
     pad_cohort_device,
 )
 from repro.data.pool import StreamedClientPool, device_pool_budget
+from repro.kernels.gossip_mix import gossip_mix
 from repro.kernels.ops import default_interpret
+from repro.utils.tree import tree_ravel_stacked, tree_unravel
 
 
 # ---------------------------------------------------------------------------
@@ -230,6 +233,10 @@ class RoundRecord:
     # rounds are charged the barrier (slowest observed arrival), async
     # applies the gap between consecutive buffer fills.
     sim_s: float = 0.0
+    # Gossip lane only: post-mix consensus distance — the RMS over nodes
+    # of each replica's L2 distance to the node-mean parameter vector
+    # (docs/topology.md). None on the star lanes.
+    consensus: Optional[float] = None
 
 
 def _monotone_crossing(curve, target: float) -> Optional[float]:
@@ -348,6 +355,7 @@ class RoundEngine:
         *,
         codec=None,
         strategy=None,
+        topology=None,
         interpret: Optional[bool] = None,
         accum_dtype=jnp.float32,
         mesh=None,
@@ -375,6 +383,55 @@ class RoundEngine:
         self.strategy = resolve_strategy(strategy)
         self.strategy.validate_cfg(cfg)
         self.outer_state = self.strategy.init_state(self.params)
+        # -- decentralized gossip lane (core.topology, docs/topology.md) --
+        # topology= switches the engine from the star reduce to per-node
+        # replicas + a sparse neighbor-mixing step. The lane is its own
+        # executable pair, so the star-only features are refused up front
+        # with the fix named, matching the streamed lane's refusal style.
+        self.topology = None if topology is None else resolve_topology(topology)
+        if self.topology is not None:
+            if codec is not None:
+                raise ValueError(
+                    "topology= is incompatible with codec=: gossip mixing "
+                    "replaces the server aggregate entirely, so there is no "
+                    "upload path to compress — drop the codec, or run the "
+                    "star lane"
+                )
+            if mesh is not None or device_sampling:
+                raise ValueError(
+                    "topology= is incompatible with mesh=/device_sampling="
+                    "True: the gossip lane runs every node every round (no "
+                    "cohort draw to shard or fuse) — construct the engine "
+                    "without them"
+                )
+            if latency is not None or async_config is not None:
+                raise ValueError(
+                    "topology= is incompatible with latency=/async_config=: "
+                    "the straggler and buffered-async schedulers dispatch "
+                    "against the star executables — gossip rounds are a "
+                    "synchronous mixing schedule (ROADMAP follow-on)"
+                )
+            if not (isinstance(pool, str) and pool in ("auto", "device")):
+                raise ValueError(
+                    "topology= needs the device-resident pool: every node "
+                    "trains every round, so streamed cohort staging would "
+                    "re-stage the whole population each round — use "
+                    "pool='device'"
+                )
+            pool = "device"
+            if not isinstance(self.strategy, FedAvg):
+                raise ValueError(
+                    f"topology= is incompatible with the "
+                    f"{self.strategy.kind!r} server strategy: there is no "
+                    "server — the Metropolis–Hastings mixing step IS the "
+                    "update rule. Use FedAvg/FedSGD (identity)"
+                )
+            if float(cfg.C) != 1.0:
+                raise ValueError(
+                    f"topology= requires cfg.C == 1.0 (every node gossips "
+                    f"every round; there is no cohort sampling), got "
+                    f"C={cfg.C}"
+                )
         # from_spec threads execution.rounds_per_step here; run() uses it
         # whenever its own rounds_per_step argument is None.
         self.default_rounds_per_step = rounds_per_step
@@ -590,6 +647,45 @@ class RoundEngine:
         self._superstep_jit = jax.jit(sbody, donate_argnums=(0, 1, 2))
         self._executables = [self._round_jit, self._superstep_jit]
 
+        if self.topology is not None:
+            # One node per packed client: build the static mixing plan
+            # (the Topology validates its (kind, n_nodes) fit here, before
+            # anything compiles) and broadcast the init params into the
+            # (n_nodes, ...) replica stack — consensus distance 0 at round
+            # 0. self.params IS the replica stack on this lane; use
+            # consensus_params() for evaluation/analysis.
+            n_nodes = packed.num_clients
+            self.plan = self.topology.build(n_nodes)
+            self._mix_idx = jnp.asarray(self.plan.idx)
+            self._mix_w = jnp.asarray(self.plan.weight)
+            self.params = jax.tree.map(
+                lambda p: jnp.tile(p[None], (n_nodes,) + (1,) * p.ndim),
+                self.params,
+            )
+            gkw = dict(
+                E=cfg.E,
+                spe=packed.max_real_steps_per_epoch,
+                B=packed.batch_size,
+                has_labels=self._y is not None,
+                interpret=self.interpret,
+                accum_dtype=jnp.dtype(accum_dtype),
+            )
+            # Same two-executable budget as the star lanes: one fused
+            # round, one scan-of-R superstep (the eager round and the scan
+            # body advance the key stream identically, so superstep(R) ==
+            # R x round() — tests/test_engine_gossip.py).
+            self._gossip_round_jit = jax.jit(
+                partial(_engine_gossip_round, loss_fn, **gkw),
+                donate_argnums=(0,),
+            )
+            self._gossip_superstep_jit = jax.jit(
+                partial(_engine_gossip_superstep, loss_fn, **gkw),
+                donate_argnums=(0, 1),
+            )
+            self._executables = [
+                self._gossip_round_jit, self._gossip_superstep_jit
+            ]
+
         # -- straggler simulation / buffered-async lane (core.scheduler) --
         # ``latency`` is a core.latency.LatencyModel driving the simulated
         # round clock (and dropout ghost-masking) in run(); ``async_config``
@@ -691,12 +787,27 @@ class RoundEngine:
         latency, async_config = None, None
         aspec = getattr(spec, "async_spec", None)
         if aspec is not None:
+            if spec.codec is not None:
+                # Refused here at the SPEC level (naming the spec fields),
+                # before the constructor's kwarg-level guard: a spec
+                # carrying both claims compressed uploads while the async
+                # lane ships dense fp32 deltas — it would misreport wire
+                # bytes, not just run slower (ROADMAP follow-on: compose
+                # the codec encode into the async client phase).
+                raise ValueError(
+                    f"spec {spec.name!r} sets both codec= and async_spec=: "
+                    "the buffered-async lane has no codec path, so the run "
+                    "would ship dense fp32 deltas while the spec claims "
+                    f"{spec.codec.kind!r} compression — drop one of the two "
+                    "fields"
+                )
             from repro.core.scheduler import AsyncConfig
 
             async_config = AsyncConfig(
                 buffer_k=aspec.buffer_k, concurrency=aspec.concurrency
             )
             latency = aspec.latency
+        tspec = getattr(spec, "topology", None)
         return cls(
             loss_fn,
             init_params,
@@ -705,6 +816,7 @@ class RoundEngine:
             eval_fn,
             codec=spec.build_codec(),
             strategy=spec.build_strategy(),
+            topology=tspec.build() if tspec is not None else None,
             interpret=ex.interpret,
             accum_dtype=jnp.dtype(ex.accum_dtype),
             mesh=mesh,
@@ -733,6 +845,20 @@ class RoundEngine:
         stays at 2; a ragged final chunk (n_rounds not a multiple of R)
         adds one scan-of-remainder executable."""
         return sum(f._cache_size() for f in self._executables)
+
+    def consensus_params(self) -> Any:
+        """The node-mean parameter tree on the gossip lane (fp32 mean over
+        the replica axis, cast back to storage dtype) — what evaluation and
+        analysis should consume: mixing is doubly stochastic, so this mean
+        is the conserved quantity the replicas contract toward. A star
+        engine's params pass through unchanged, so callers can be
+        lane-agnostic."""
+        if self.topology is None:
+            return self.params
+        return jax.tree.map(
+            lambda p: jnp.mean(p.astype(jnp.float32), axis=0).astype(p.dtype),
+            self.params,
+        )
 
     def lr_at(self, rnd: int) -> float:
         """Client lr for round ``rnd``. A callable ``cfg.lr`` is a complete
@@ -932,7 +1058,10 @@ class RoundEngine:
         return np.asarray(jax.device_get(losses))
 
     def round(self) -> Dict[str, float]:
-        """One synchronous round; returns {'loss': ...}."""
+        """One synchronous round; returns {'loss': ...} (plus
+        'consensus' on the gossip lane)."""
+        if self.topology is not None:
+            return self._round_gossip()
         if self.pool_kind == "streamed":
             return self._round_streamed()
         ids, valid, key, lr = self._next_round_inputs()
@@ -942,6 +1071,23 @@ class RoundEngine:
         )
         self.round_idx += 1
         return {"loss": loss}
+
+    def _round_gossip(self) -> Dict[str, float]:
+        """One gossip round: every node runs its local-SGD phase on its
+        own shard, then one neighbor-mixing step — a single donated
+        executable. The data key comes off the device PRNG stream with the
+        exact split the superstep scan carry uses, so superstep(R) ==
+        R x round() holds here as on the star lane."""
+        k_data, k_next = jax.random.split(self.sample_key)
+        with sanctioned_staging():
+            lr = jnp.float32(self.lr_at(self.round_idx))
+        self.params, loss, consensus = self._gossip_round_jit(
+            self.params, self._x, self._y, self._counts, self._spe,
+            self._mix_idx, self._mix_w, k_data, lr,
+        )
+        self.sample_key = k_next
+        self.round_idx += 1
+        return {"loss": loss, "consensus": consensus}
 
     def _resolve_rounds_per_step(
         self, rounds_per_step, n_rounds: int, eval_every: int
@@ -1039,6 +1185,10 @@ class RoundEngine:
             )
         from repro.core.scheduler import RoundScheduler
 
+        if self.topology is not None:
+            return self._run_gossip(
+                n_rounds, eval_every, target_acc, verbose, rounds_per_step
+            )
         if self.async_config is not None:
             return RoundScheduler(self).run_async(
                 n_rounds, eval_every, target_acc, verbose
@@ -1093,6 +1243,67 @@ class RoundEngine:
                     break
         return self.history
 
+    def _run_gossip(
+        self, n_rounds, eval_every, target_acc, verbose, rounds_per_step
+    ) -> History:
+        """The gossip round loop, mirroring :meth:`_run_supersteps`: chunks
+        of R rounds through the scan-fused gossip superstep (R=1 by
+        default — there is no cohort draw, so superstepping is purely a
+        dispatch amortization), per-round consensus distance recorded in
+        the history, evaluation on :meth:`consensus_params` whenever a
+        chunk crosses an eval point."""
+        R = rounds_per_step
+        if R is None:
+            R = self.default_rounds_per_step
+        R = 1 if R is None else int(R)
+        if R < 1:
+            raise ValueError(f"rounds_per_step must be >= 1, got {R}")
+        done = 0
+        while done < n_rounds:
+            r = min(R, n_rounds - done)
+            t0 = time.perf_counter()
+            with sanctioned_staging():
+                lrs = jnp.asarray(
+                    [self.lr_at(self.round_idx + i) for i in range(r)],
+                    jnp.float32,
+                )
+            self.params, self.sample_key, losses, cons = (
+                self._gossip_superstep_jit(
+                    self.params, self.sample_key, self._x, self._y,
+                    self._counts, self._spe, self._mix_idx, self._mix_w, lrs,
+                )
+            )
+            losses = np.asarray(jax.device_get(losses))
+            cons = np.asarray(jax.device_get(cons))
+            chunk_s = time.perf_counter() - t0
+            self.round_idx += r
+            done += r
+            for j in range(r):
+                self.history.records.append(RoundRecord(
+                    round=self.round_idx - r + j + 1,
+                    train_loss=float(losses[j]),
+                    wall_s=chunk_s / r,
+                    consensus=float(cons[j]),
+                ))
+            rec = self.history.records[-1]
+            crossed = (
+                self.round_idx // eval_every
+                > (self.round_idx - r) // eval_every
+            )
+            if self.eval_fn is not None and (crossed or done >= n_rounds):
+                ev = self.eval_fn(self.consensus_params())
+                rec.test_acc = float(ev["acc"])
+                rec.test_loss = float(ev.get("loss", np.nan))
+                if verbose:
+                    print(
+                        f"round {self.round_idx:5d} loss {rec.train_loss:.4f} "
+                        f"consensus {rec.consensus:.2e} "
+                        f"test_acc {rec.test_acc:.4f}"
+                    )
+                if target_acc is not None and rec.test_acc >= target_acc:
+                    break
+        return self.history
+
     # -- checkpoint / resume ----------------------------------------------
 
     def save(self, ckpt_dir) -> str:
@@ -1131,6 +1342,15 @@ class RoundEngine:
                 "sample_key": [int(v) for v in np.asarray(self.sample_key)],
                 "device_sampling": self.device_sampling,
                 "strategy": self.strategy.name,
+                # Gossip lane: the serialized topology identity (None on
+                # star engines). The params tree above is then the full
+                # (n_nodes, ...) replica stack — restore refuses a
+                # mismatched graph, which would silently mix with
+                # different weights (or a different node count) from
+                # round_idx on.
+                "topology": (
+                    self.topology.name if self.topology is not None else None
+                ),
                 "history": [
                     dataclasses.asdict(r) for r in self.history.records
                 ],
@@ -1173,6 +1393,19 @@ class RoundEngine:
                 f"device_sampling={self.device_sampling} — resuming across "
                 "sampling modes would silently continue with a different "
                 "cohort stream and break bit-for-bit resume"
+            )
+        rec_topo = meta.get("topology")
+        eng_topo = self.topology.name if self.topology is not None else None
+        if rec_topo != eng_topo:
+            # Same pattern as the sampling-mode/strategy guards: the
+            # replica stack only means something under the graph that
+            # produced it, and a star<->gossip mismatch would not even
+            # shape-check — refuse with the identities named.
+            raise ValueError(
+                f"checkpoint was written by a topology={rec_topo} engine "
+                f"but this engine has topology={eng_topo} — restoring "
+                "across communication graphs would silently continue a "
+                "different mixing process"
             )
         recorded = meta.get("strategy")
         if recorded is not None and recorded != self.strategy.name:
@@ -1476,6 +1709,77 @@ def _engine_superstep(
         one_round, (params, outer, key), lrs
     )
     return params, outer, key, losses
+
+
+# -- gossip executables (core.topology, docs/topology.md) -------------------
+#
+# The decentralized lane's round: no server, no cohort draw — every node
+# runs the SAME local-SGD phase as the star lane's ClientUpdate on its own
+# client shard (node k <-> packed client k, so batch permutation keys fold
+# in slot k exactly as a star round over ids = arange(K) would — the hinge
+# of the full-graph == FedAvg equivalence), then one Metropolis–Hastings
+# neighbor-mixing step through the Pallas gossip_mix kernel replaces the
+# aggregate+broadcast.
+
+def _engine_gossip_round(
+    loss_fn, stacked, px, py, counts, spe_arr, mix_idx, mix_w, key, lr,
+    *, E, spe, B, has_labels, interpret, accum_dtype,
+):
+    """One fused gossip round over the (n_nodes, ...) replica stack.
+    Returns (mixed replica stack, cohort train loss, consensus distance).
+
+    The mix inlines ``ops.tree_gossip_mix`` so the raveled (n_nodes, N)
+    matrix is shared with the consensus-distance metric — the RMS over
+    nodes of each post-mix replica's L2 distance to the node mean, the
+    scalar that measures how far the swarm is from agreeing on one model
+    (0 exactly when all replicas are equal; one full-graph mix drives it
+    to ~0 in a single step)."""
+    n_nodes = counts.shape[0]
+    ids = jnp.arange(n_nodes, dtype=jnp.int32)
+    batch, mask, w = _assemble_batches(
+        px, py, counts, spe_arr, ids, key, E=E, spe=spe, B=B,
+        has_labels=has_labels,
+    )
+    upd = jax.vmap(
+        lambda p, b, msk: client_update(loss_fn, p, b, msk, lr)
+    )
+    node_params, losses = upd(stacked, batch, mask)
+    loss = masked_weighted_loss(losses, mask, w)
+    flat, spec = tree_ravel_stacked(node_params)
+    mixed = gossip_mix(
+        flat, mix_idx, mix_w, interpret=interpret, accum_dtype=accum_dtype
+    )
+    mf = mixed.astype(jnp.float32)
+    center = jnp.mean(mf, axis=0, keepdims=True)
+    consensus = jnp.sqrt(jnp.mean(jnp.sum((mf - center) ** 2, axis=1)))
+    new_stacked = jax.vmap(lambda row: tree_unravel(spec, row))(mixed)
+    return new_stacked, loss, consensus
+
+
+def _engine_gossip_superstep(
+    loss_fn, stacked, key, px, py, counts, spe_arr, mix_idx, mix_w, lrs,
+    *, E, spe, B, has_labels, interpret, accum_dtype,
+):
+    """R = len(lrs) gossip rounds fused into one ``lax.scan``. The carry
+    key splits into (data key, next carry) exactly as the eager
+    ``_round_gossip`` does — same stream, so superstep(R) == R x round()
+    round for round. Returns (replicas, advanced key, (R,) losses,
+    (R,) consensus distances)."""
+
+    def one_round(carry, lr):
+        p, k = carry
+        k_data, k_next = jax.random.split(k)
+        new_p, loss, cons = _engine_gossip_round(
+            loss_fn, p, px, py, counts, spe_arr, mix_idx, mix_w, k_data, lr,
+            E=E, spe=spe, B=B, has_labels=has_labels, interpret=interpret,
+            accum_dtype=accum_dtype,
+        )
+        return (new_p, k_next), (loss, cons)
+
+    (stacked, key), (losses, conss) = jax.lax.scan(
+        one_round, (stacked, key), lrs
+    )
+    return stacked, key, losses, conss
 
 
 # -- buffered-async executables (core.scheduler) ----------------------------

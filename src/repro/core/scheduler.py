@@ -89,6 +89,25 @@ class RoundScheduler:
     owns params/RNG/history; the scheduler owns the event clock."""
 
     def __init__(self, engine):
+        # Defense in depth behind RoundEngine's constructor guard (and
+        # from_spec's spec-level one): engine attributes are plain-mutable
+        # after construction, and a codec+async engine reaching this far
+        # would silently ship dense fp32 deltas while claiming compressed
+        # uploads — the scheduler's client phase has no codec path
+        # (ROADMAP follow-on: compose encode into the dispatch phase).
+        if engine.async_config is not None and engine.codec is not None:
+            raise ValueError(
+                "RoundScheduler cannot run a codec= engine on the "
+                "buffered-async schedule: the async client phase ships "
+                "dense fp32 deltas, so the codec would be silently ignored "
+                "— drop codec= or async_config="
+            )
+        if getattr(engine, "topology", None) is not None:
+            raise ValueError(
+                "RoundScheduler drives the star lanes only: gossip engines "
+                "(topology=) run their own mixing schedule — use "
+                "RoundEngine.run() directly"
+            )
         self.engine = engine
         self.model: Optional[LatencyModel] = engine.latency
         self.acfg: Optional[AsyncConfig] = engine.async_config

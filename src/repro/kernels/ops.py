@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels.ce_loss import fused_cross_entropy
 from repro.kernels.fedavg_agg import fedavg_aggregate
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gossip_mix import gossip_mix, gossip_mix_ref  # noqa: F401
 from repro.kernels.quantized_agg import (
     packed_quantized_aggregate,
     quantized_aggregate,
@@ -65,6 +66,24 @@ def tree_fedavg_aggregate(stacked_params, weights, *, interpret=False,
     avg = fedavg_aggregate(flat, w, interpret=interpret,
                            accum_dtype=accum_dtype, block_n=block_n)
     return tree_unravel(spec, avg)
+
+
+def tree_gossip_mix(stacked_params, idx, weight, *, interpret=False,
+                    accum_dtype=jnp.float32, block_nodes=None, block_n=None):
+    """Gossip-mix a pytree whose leaves are (n_nodes, ...) stacked per-node
+    replicas — the decentralized lane's ``X <- W @ X`` step, flattened
+    through the Pallas :func:`gossip_mix` kernel.
+
+    ``idx``/``weight`` are a ``MixingPlan``'s static padded arrays (see
+    core/topology.py); the mixing contraction runs in ``accum_dtype`` fp32
+    regardless of storage dtype, and each leaf round-trips back to its
+    storage dtype through the recorded spec (bf16 replicas supported)."""
+    flat, spec = tree_ravel_stacked(stacked_params)
+    mixed = gossip_mix(
+        flat, idx, weight, interpret=interpret, accum_dtype=accum_dtype,
+        block_nodes=block_nodes, block_n=block_n,
+    )
+    return jax.vmap(lambda row: tree_unravel(spec, row))(mixed)
 
 
 def sharded_fedavg_aggregate(stacked_params, weights, *, axis_name,

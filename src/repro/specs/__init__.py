@@ -5,5 +5,6 @@ from repro.specs.spec import (
     ExperimentSpec,
     ModelSpec,
     PartitionSpec,
+    TopologySpec,
 )
 from repro.specs.presets import PAPER_SPECS, get_spec, list_specs

@@ -30,6 +30,7 @@ from repro.specs.spec import (
     ExperimentSpec,
     ModelSpec,
     PartitionSpec,
+    TopologySpec,
 )
 
 _MNIST_FEDAVG = FedAvgConfig(C=0.1, E=5, B=10, lr=0.1, seed=0)
@@ -128,6 +129,23 @@ PAPER_SPECS: Dict[str, ExperimentSpec] = {
                     hetero=0.5, dropout=0.05,
                 ),
             ),
+        ),
+        # Decentralized gossip (docs/topology.md): no server — per-node
+        # replicas mix with graph neighbors under Metropolis–Hastings
+        # weights. C=1.0 (every node gossips every round); the ring is the
+        # worst-case mixer / cheapest wire, the Watts–Strogatz small world
+        # adds O(log n) shortcuts at degree 4.
+        _mnist(
+            "mnist_2nn_noniid_ring", "mnist_2nn", "pathological_noniid",
+            fedavg=FedAvgConfig(C=1.0, E=5, B=10, lr=0.1, seed=0),
+            topology=TopologySpec("ring", degree=2),
+        ),
+        _mnist(
+            "mnist_2nn_noniid_smallworld", "mnist_2nn",
+            "pathological_noniid",
+            fedavg=FedAvgConfig(C=1.0, E=5, B=10, lr=0.1, seed=0),
+            topology=TopologySpec("smallworld", degree=4, rewire=0.2,
+                                  seed=0),
         ),
     ]
 }

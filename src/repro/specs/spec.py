@@ -145,6 +145,38 @@ class CodecSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """The gossip communication graph (docs/topology.md): ``ring``
+    (``degree``) | ``torus`` | ``smallworld`` (``degree``, ``rewire``,
+    ``seed``) | ``random`` (``p``, ``seed``) | ``full``. ``None`` at the
+    ExperimentSpec level means the star lane (centralized FedAvg — no
+    gossip at all); a TopologySpec switches the engine to per-node
+    replicas with Metropolis–Hastings neighbor mixing and requires
+    ``fedavg.C == 1.0`` (every node gossips every round).
+
+    Fields default to ``None`` = "use the kind's own default"; only
+    explicitly-set fields reach the ``core.topology`` constructor, so a
+    field foreign to the kind (e.g. ``p`` on a ring) fails loudly there
+    instead of being silently dropped."""
+
+    kind: str
+    degree: Optional[int] = None
+    rewire: Optional[float] = None
+    p: Optional[float] = None
+    seed: Optional[int] = None
+
+    def build(self):
+        from repro.core.topology import topology_from_json
+
+        d: Dict[str, Any] = {"kind": self.kind}
+        for f in ("degree", "rewire", "p", "seed"):
+            v = getattr(self, f)
+            if v is not None:
+                d[f] = v
+        return topology_from_json(d)
+
+
+@dataclasses.dataclass(frozen=True)
 class AsyncSpec:
     """The buffered-async axis (docs/engine.md "Asynchronous rounds"):
     the server applies an aggregate whenever ``buffer_k`` of
@@ -200,6 +232,9 @@ class ExperimentSpec:
     fedavg: FedAvgConfig
     strategy: ServerStrategy = FedAvg()
     codec: Optional[CodecSpec] = None
+    # None = star lane; a TopologySpec switches to the decentralized
+    # gossip lane (per-node replicas + MH neighbor mixing).
+    topology: Optional[TopologySpec] = None
     execution: ExecutionSpec = ExecutionSpec()
     # None = synchronous rounds; an AsyncSpec switches run() to the
     # buffered-async schedule (and carries the straggler model).
@@ -241,6 +276,10 @@ class ExperimentSpec:
                 dataclasses.asdict(self.codec)
                 if self.codec is not None else None
             ),
+            "topology": (
+                dataclasses.asdict(self.topology)
+                if self.topology is not None else None
+            ),
             "execution": dataclasses.asdict(self.execution),
             "async_spec": (
                 dataclasses.asdict(self.async_spec)
@@ -268,6 +307,9 @@ class ExperimentSpec:
             fedavg=FedAvgConfig(**d["fedavg"]),
             strategy=strategy_from_json(d["strategy"]),
             codec=CodecSpec(**d["codec"]) if d.get("codec") else None,
+            topology=(
+                TopologySpec(**d["topology"]) if d.get("topology") else None
+            ),
             execution=ExecutionSpec(**d.get("execution", {})),
             async_spec=aspec,
             rounds=int(d.get("rounds", 100)),

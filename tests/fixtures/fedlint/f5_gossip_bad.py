@@ -1,0 +1,25 @@
+"""Seeded F5 violations in the gossip-mix shape: a neighbor-mixing kernel
+whose one-hot and mixing matmuls skip the accumulation dtype, and a node
+grid computed with plain floor division (drops the ragged tail cohort)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mix_kernel(idx_ref, w_ref, x_ref, o_ref):
+    idx = idx_ref[...]
+    w = w_ref[...]
+    x = x_ref[...]
+    node_ids = jax.lax.broadcasted_iota(jnp.int32, (1, x.shape[0]), 1)
+    onehot = (idx[:, :, None] == node_ids[None]).astype(jnp.float32)
+    w_rows = jnp.einsum("ns,nsk->nk", w, onehot)  # expect: F5
+    o_ref[...] = w_rows @ x  # expect: F5
+
+
+def mix(x, idx, w, block_nodes=8):
+    n = x.shape[0]
+    return pl.pallas_call(
+        _mix_kernel,
+        grid=(n // block_nodes,),  # expect: F5
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+    )(idx, w, x)

@@ -54,6 +54,34 @@ def test_clean_twin_has_zero_findings(family):
     assert lint_source(path.read_text(), str(path)) == []
 
 
+def test_f5_gossip_bad_fixture_exact_hits():
+    """The gossip-mix-shaped F5 corpus: one-hot + mixing matmuls without
+    an accumulation dtype, and a node grid with plain floor division."""
+    path = FIXTURES / "f5_gossip_bad.py"
+    got = sorted(
+        (f.rule, f.line) for f in lint_source(path.read_text(), str(path))
+    )
+    exp = _expected(path)
+    assert len(exp) >= 2, "corpus contract: >= 2 seeded violations"
+    assert got == exp
+    assert {r for r, _ in got} == {"F5"}
+
+
+def test_f5_gossip_clean_twin_has_zero_findings():
+    path = FIXTURES / "f5_gossip_clean.py"
+    assert lint_source(path.read_text(), str(path)) == []
+
+
+def test_gossip_mix_kernel_is_lint_clean():
+    """The shipped neighbor-mixing kernel honors the F5 contracts it is
+    the newest subject of (pinned here so a refactor that drops
+    preferred_element_type or the pad idiom fails fast)."""
+    report = run_paths(
+        [str(REPO / "src" / "repro" / "kernels" / "gossip_mix.py")]
+    )
+    assert report.parse_errors == [] and report.findings == []
+
+
 def test_suppression_comments_silence_findings():
     path = FIXTURES / "suppressed.py"
     src = path.read_text()

@@ -1,0 +1,322 @@
+"""The decentralized gossip lane end to end: full-graph == centralized
+FedAvg (the correctness anchor), superstep fusion, compile-count budget,
+consensus metric, checkpoint round-trip + mismatch guards, spec front
+door, and the lane's refusal matrix."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    RoundBatch,
+    RoundEngine,
+    RoundState,
+    build_simulation_round_step,
+)
+from repro.core.fedavg import FedAvgConfig
+from repro.core.scheduler import AsyncConfig, RoundScheduler
+from repro.core.topology import FullTopology, RingTopology
+from repro.models import mnist_2nn
+from repro.specs import (
+    ExperimentSpec,
+    ModelSpec,
+    PartitionSpec,
+    TopologySpec,
+)
+
+
+def _equal_shard_clients(rng, K=8, n_per=16, d=20, classes=5):
+    """Equal-sized shards: uniform n_k/n == the full graph's uniform MH
+    weights, the precondition of the FedAvg equivalence."""
+    out = []
+    for _ in range(K):
+        x = rng.normal(size=(n_per, d)).astype(np.float32)
+        y = rng.integers(0, classes, size=n_per).astype(np.int64)
+        out.append((x, y))
+    return out
+
+
+def _setup(rng, K=8, **eng_kw):
+    clients = _equal_shard_clients(rng, K=K)
+    model = mnist_2nn(n_classes=5, d_in=20)
+    params = model.init(jax.random.PRNGKey(0))
+    cfg = eng_kw.pop("cfg", FedAvgConfig(C=1.0, E=2, B=8, lr=0.1, seed=3))
+    eng = RoundEngine(model.loss, params, clients, cfg, **eng_kw)
+    return model, params, clients, cfg, eng
+
+
+def _tree_close(a, b, atol):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(
+            np.asarray(x, np.float32), np.asarray(y, np.float32), atol=atol
+        )
+
+
+# ---------------------------------------------------------------------------
+# the correctness anchor: full graph == centralized FedAvg
+# ---------------------------------------------------------------------------
+
+def test_full_topology_matches_fedavg_round_for_round(rng):
+    """Topology('full') gossip == centralized FedAvg, round for round:
+    MH weights on K_n are exactly uniform 1/n, node k trains client k with
+    the same slot-keyed batches a star round over ids=arange(K) draws, so
+    one mix step IS the server's equal-weight aggregate (tolerance covers
+    the gossip-mix vs fedavg-aggregate kernels' different fp32 contraction
+    orders)."""
+    model, params, clients, cfg, eng = _setup(rng, topology=FullTopology())
+    K = len(clients)
+    step = build_simulation_round_step(model.loss, interpret=True)
+    ref_params = jax.tree.map(jnp.array, params)
+    ref_eng = RoundEngine(model.loss, params, clients, cfg)  # for batches
+    key = jax.random.PRNGKey(cfg.seed)
+    ids = jnp.arange(K, dtype=jnp.int32)
+    for r in range(3):
+        metrics = eng.round()
+        # replay the gossip lane's key chain for the reference round
+        k_data, key = jax.random.split(key)
+        batch, mask, w = ref_eng.materialize_round_batch(ids, k_data)
+        state, ref_m = step(
+            RoundState(ref_params),
+            RoundBatch(batch, mask, w, lr=jnp.float32(eng.lr_at(r))),
+        )
+        ref_params = state.params
+        _tree_close(eng.consensus_params(), ref_params, atol=2e-5)
+        # on the full graph every replica IS the consensus after each mix
+        np.testing.assert_allclose(float(metrics["consensus"]), 0.0,
+                                   atol=1e-5)
+        np.testing.assert_allclose(
+            float(metrics["loss"]), float(ref_m["loss"]), atol=1e-5
+        )
+
+
+def test_gossip_superstep_matches_rounds(rng):
+    """run(rounds_per_step=R) == R x round(): the scan body splits the
+    carry key exactly as the eager round does."""
+    model, params, clients, cfg, eng_a = _setup(rng, topology="ring")
+    eng_b = RoundEngine(model.loss, params, clients, cfg, topology="ring")
+    for _ in range(4):
+        eng_a.round()
+    eng_b.run(4, eval_every=100, rounds_per_step=4)
+    _tree_close(eng_a.params, eng_b.params, atol=0)
+    assert eng_b.num_compilations <= 2
+
+
+def test_gossip_compile_count(rng):
+    """The two-executable budget holds on the gossip lane: a run of
+    superstep chunks plus extra eager rounds stays at <= 2 distinct
+    compilations."""
+    model, params, clients, cfg, eng = _setup(rng, topology="ring")
+    eng.run(4, eval_every=100, rounds_per_step=2)
+    eng.round()
+    eng.round()
+    assert eng.num_compilations <= 2
+
+
+def test_gossip_consensus_metric_recorded(rng):
+    """Ring replicas genuinely disagree (consensus > 0), the metric lands
+    in the history records, and a full-graph engine reports ~0."""
+    _, params, clients, cfg, eng = _setup(rng, topology=RingTopology())
+    h = eng.run(3, eval_every=100)
+    cons = [r.consensus for r in h.records]
+    assert len(cons) == 3 and all(c is not None and c > 0 for c in cons)
+    assert all(np.isfinite(r.train_loss) for r in h.records)
+    _, _, _, _, eng_full = _setup(rng, topology="full")
+    m = eng_full.round()
+    np.testing.assert_allclose(float(m["consensus"]), 0.0, atol=1e-5)
+
+
+def test_gossip_eval_uses_consensus_params(rng):
+    """run() evaluates the node-mean model; a star engine's
+    consensus_params passes params through unchanged."""
+    seen = []
+
+    def eval_fn(p):
+        seen.append(jax.tree.leaves(p)[0].ndim)
+        return {"acc": 0.5, "loss": 1.0}
+
+    model, params, clients, cfg, eng = _setup(
+        rng, topology="ring", eval_fn=eval_fn
+    )
+    eng.run(2, eval_every=1)
+    # evaluated trees are single models (unstacked), not replica stacks
+    single_ndim = jax.tree.leaves(params)[0].ndim
+    assert seen and all(nd == single_ndim for nd in seen)
+    star = RoundEngine(model.loss, params, clients, cfg)
+    assert star.consensus_params() is star.params
+
+
+# ---------------------------------------------------------------------------
+# checkpoints
+# ---------------------------------------------------------------------------
+
+def test_gossip_checkpoint_resume_bitwise(rng):
+    model, params, clients, cfg, eng = _setup(rng, topology="ring")
+    eng.run(3, eval_every=100)
+    with tempfile.TemporaryDirectory() as d:
+        eng.save(d)
+        eng.run(2, eval_every=100)
+        eng2 = RoundEngine(model.loss, params, clients, cfg, topology="ring")
+        assert eng2.restore(d) == 3
+        eng2.run(2, eval_every=100)
+        _tree_close(eng.params, eng2.params, atol=0)
+        assert len(eng2.history.records) == len(eng.history.records)
+        # the restored history keeps the consensus column
+        assert eng2.history.records[0].consensus is not None
+
+
+def test_gossip_checkpoint_topology_mismatch_refused(rng):
+    model, params, clients, cfg, eng = _setup(rng, topology="ring")
+    eng.run(1, eval_every=100)
+    with tempfile.TemporaryDirectory() as d:
+        eng.save(d)
+        other = RoundEngine(model.loss, params, clients, cfg,
+                            topology="full")
+        with pytest.raises(ValueError, match="communication graphs"):
+            other.restore(d)
+        star = RoundEngine(
+            model.loss, params, clients,
+            FedAvgConfig(C=0.5, E=2, B=8, lr=0.1, seed=3),
+        )
+        with pytest.raises(ValueError, match="topology"):
+            star.restore(d)
+
+
+def test_star_checkpoint_into_gossip_engine_refused(rng):
+    model, params, clients, cfg, _ = _setup(rng)
+    star = RoundEngine(model.loss, params, clients,
+                       FedAvgConfig(C=0.5, E=2, B=8, lr=0.1, seed=3))
+    star.round()
+    with tempfile.TemporaryDirectory() as d:
+        star.save(d)
+        goss = RoundEngine(model.loss, params, clients, cfg,
+                           topology="ring")
+        with pytest.raises(ValueError, match="topology"):
+            goss.restore(d)
+
+
+# ---------------------------------------------------------------------------
+# spec front door
+# ---------------------------------------------------------------------------
+
+def _gossip_spec(**kw):
+    return ExperimentSpec(
+        name="t_gossip",
+        model=ModelSpec("mnist_2nn", kwargs={"n_classes": 5, "d_in": 20}),
+        partition=PartitionSpec("iid", n_clients=8),
+        fedavg=FedAvgConfig(C=1.0, E=2, B=8, lr=0.1, seed=3),
+        topology=kw.pop("topology", TopologySpec("ring", degree=2)),
+        **kw,
+    )
+
+
+def test_from_spec_threads_topology(rng):
+    spec = _gossip_spec()
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    clients = _equal_shard_clients(rng)
+    model = mnist_2nn(n_classes=5, d_in=20)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = RoundEngine.from_spec(
+        spec, clients, loss_fn=model.loss, init_params=params
+    )
+    assert eng.topology == RingTopology(degree=2)
+    kw_eng = RoundEngine(model.loss, params, clients, spec.fedavg,
+                         topology=RingTopology(degree=2))
+    eng.round()
+    kw_eng.round()
+    _tree_close(eng.params, kw_eng.params, atol=0)
+
+
+def test_registry_gossip_presets_load():
+    from repro.specs import get_spec
+
+    for name in ("mnist_2nn_noniid_ring", "mnist_2nn_noniid_smallworld"):
+        s = get_spec(name)
+        assert s.topology is not None and s.fedavg.C == 1.0
+        s.topology.build().build(s.partition.n_clients)  # materializes
+
+
+# ---------------------------------------------------------------------------
+# refusal matrix (and the async/codec composition audit)
+# ---------------------------------------------------------------------------
+
+def test_gossip_refusal_matrix(rng):
+    clients = _equal_shard_clients(rng)
+    model = mnist_2nn(n_classes=5, d_in=20)
+    params = model.init(jax.random.PRNGKey(0))
+    cfg = FedAvgConfig(C=1.0, E=2, B=8, lr=0.1, seed=3)
+
+    def build(**kw):
+        return RoundEngine(model.loss, params, clients, cfg,
+                           topology="ring", **kw)
+
+    from repro.core.compression import quantize_codec
+
+    with pytest.raises(ValueError, match="codec"):
+        build(codec=quantize_codec(8))
+    with pytest.raises(ValueError, match="device_sampling"):
+        build(device_sampling=True)
+    with pytest.raises(ValueError, match="async"):
+        build(async_config=AsyncConfig(buffer_k=2))
+    with pytest.raises(ValueError, match="latency"):
+        from repro.core.latency import LatencyModel
+
+        build(latency=LatencyModel())
+    with pytest.raises(ValueError, match="pool"):
+        build(pool="streamed")
+    with pytest.raises(ValueError, match="strategy"):
+        from repro.core.strategies import FedAvgM
+
+        build(strategy=FedAvgM())
+    with pytest.raises(ValueError, match="C == 1.0"):
+        RoundEngine(model.loss, params, clients,
+                    FedAvgConfig(C=0.5, E=2, B=8, lr=0.1, seed=3),
+                    topology="ring")
+    # FedSGD is an identity strategy and stays allowed (with its config)
+    from repro.core import fedsgd_config
+
+    eng = RoundEngine(model.loss, params, clients,
+                      fedsgd_config(C=1.0, lr=0.1, seed=3),
+                      strategy="fedsgd", topology="ring")
+    assert eng.topology is not None
+
+
+def test_from_spec_refuses_codec_plus_async():
+    """S1 audit: a spec carrying both codec and async_spec would ship
+    dense fp32 deltas while claiming compression — refused at the spec
+    level, naming both fields."""
+    from repro.specs import AsyncSpec, CodecSpec
+
+    spec = ExperimentSpec(
+        name="t_bad",
+        model=ModelSpec("mnist_2nn", kwargs={"n_classes": 5, "d_in": 20}),
+        partition=PartitionSpec("iid", n_clients=8),
+        fedavg=FedAvgConfig(C=0.5, E=1, B=8, lr=0.1, seed=0),
+        codec=CodecSpec("quantize", bits=8),
+        async_spec=AsyncSpec(buffer_k=2),
+    )
+    with pytest.raises(ValueError, match="codec= and async_spec="):
+        RoundEngine.from_spec(spec, [])
+
+
+def test_scheduler_refuses_mutated_codec_async_engine(rng):
+    """Defense in depth behind the constructor guard: engine attributes
+    are plain-mutable, so the scheduler re-checks at run entry."""
+    clients = _equal_shard_clients(rng)
+    model = mnist_2nn(n_classes=5, d_in=20)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = RoundEngine(model.loss, params, clients,
+                      FedAvgConfig(C=0.5, E=1, B=8, lr=0.1, seed=0))
+    from repro.core.compression import quantize_codec
+
+    eng.codec = quantize_codec(8)
+    eng.async_config = AsyncConfig(buffer_k=2)
+    with pytest.raises(ValueError, match="codec"):
+        RoundScheduler(eng)
+
+
+def test_scheduler_refuses_gossip_engine(rng):
+    _, _, _, _, eng = _setup(rng, topology="ring")
+    with pytest.raises(ValueError, match="gossip"):
+        RoundScheduler(eng)

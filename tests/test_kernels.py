@@ -341,3 +341,159 @@ def test_fused_ce_sweep(rng, T, d, V, bt, bv):
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, lbl[:, None], axis=-1)[:, 0]
     np.testing.assert_allclose(out, logz - gold, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gossip neighbor mixing
+# ---------------------------------------------------------------------------
+
+from repro.core.topology import TOPOLOGIES
+from repro.kernels.gossip_mix import gossip_mix, gossip_mix_ref
+
+
+def _plan_arrays(kind, n):
+    plan = TOPOLOGIES[kind]().build(n)
+    return jnp.asarray(plan.idx), jnp.asarray(plan.weight)
+
+
+@pytest.mark.parametrize("kind", sorted(TOPOLOGIES))
+@pytest.mark.parametrize("n,N,bn,bc", [
+    (5, 16, None, None),      # single block
+    (8, 37, 4, 16),           # ragged N, multi-block on both axes
+    (16, 130, 8, 64),         # N % block_n != 0
+])
+def test_gossip_mix_matches_oracle_sweep(rng, kind, n, N, bn, bc):
+    x = jnp.asarray(rng.normal(size=(n, N)).astype(np.float32))
+    idx, w = _plan_arrays(kind, n)
+    out = gossip_mix(x, idx, w, block_nodes=bn, block_n=bc, interpret=True)
+    np.testing.assert_allclose(out, gossip_mix_ref(x, idx, w), atol=1e-5)
+
+
+def test_gossip_mix_bf16_values_fp32_accumulate(rng):
+    n, N = 8, 48
+    x = jnp.asarray(rng.normal(size=(n, N)).astype(np.float32)).astype(
+        jnp.bfloat16
+    )
+    idx, w = _plan_arrays("smallworld", n)
+    out = gossip_mix(x, idx, w, interpret=True)
+    assert out.dtype == jnp.bfloat16
+    want = gossip_mix_ref(x, idx, w)
+    np.testing.assert_allclose(
+        out.astype(np.float32), np.asarray(want, np.float32), atol=3e-2
+    )
+
+
+def test_gossip_mix_degree_one_pair_swap(rng):
+    """The 2-node graph: MH weight 1/2 each way — one mix step averages the
+    pair exactly."""
+    x = jnp.asarray(rng.normal(size=(2, 12)).astype(np.float32))
+    idx = jnp.asarray([[0, 1], [0, 1]], jnp.int32)
+    w = jnp.full((2, 2), 0.5, jnp.float32)
+    out = gossip_mix(x, idx, w, interpret=True)
+    want = jnp.tile(x.mean(axis=0, keepdims=True), (2, 1))
+    np.testing.assert_allclose(out, want, atol=1e-6)
+
+
+def test_gossip_mix_self_loop_identity(rng):
+    """Rows whose only live slot is self (weight 1) pass through unchanged —
+    the padded-slot convention taken to the limit."""
+    n, N = 4, 20
+    x = jnp.asarray(rng.normal(size=(n, N)).astype(np.float32))
+    idx = jnp.tile(jnp.arange(n, dtype=jnp.int32)[:, None], (1, 3))
+    w = jnp.concatenate(
+        [jnp.ones((n, 1), jnp.float32), jnp.zeros((n, 2), jnp.float32)],
+        axis=1,
+    )
+    out = gossip_mix(x, idx, w, interpret=True)
+    np.testing.assert_allclose(out, x, atol=0)
+
+
+def test_gossip_mix_duplicate_neighbor_ids_accumulate(rng):
+    """Duplicate slot ids are multigraph edges: their weights add, exactly
+    as the dense W @ X oracle's scatter does."""
+    x = jnp.asarray(rng.normal(size=(3, 8)).astype(np.float32))
+    idx = jnp.asarray([[1, 1, 0], [0, 2, 1], [2, 2, 2]], jnp.int32)
+    w = jnp.asarray(
+        [[0.25, 0.25, 0.5], [0.3, 0.3, 0.4], [0.5, 0.5, 0.0]], jnp.float32
+    )
+    out = gossip_mix(x, idx, w, interpret=True)
+    W = np.zeros((3, 3), np.float32)
+    np.add.at(W, (np.repeat(np.arange(3), 3), np.asarray(idx).ravel()),
+              np.asarray(w).ravel())
+    np.testing.assert_allclose(out, W @ np.asarray(x), atol=1e-6)
+    np.testing.assert_allclose(out, gossip_mix_ref(x, idx, w), atol=1e-6)
+
+
+def test_gossip_mix_zero_weight_padding_inert(rng):
+    """Padded slots (idx == self, weight 0) contribute nothing: widening a
+    plan with extra dead slots leaves the output bit-identical."""
+    n, N = 6, 24
+    x = jnp.asarray(rng.normal(size=(n, N)).astype(np.float32))
+    idx, w = _plan_arrays("ring", n)
+    pad_idx = jnp.concatenate(
+        [idx, jnp.tile(jnp.arange(n, dtype=jnp.int32)[:, None], (1, 2))],
+        axis=1,
+    )
+    pad_w = jnp.concatenate([w, jnp.zeros((n, 2), jnp.float32)], axis=1)
+    a = gossip_mix(x, idx, w, interpret=True)
+    b = gossip_mix(x, pad_idx, pad_w, interpret=True)
+    np.testing.assert_allclose(a, b, atol=0)
+
+
+def test_gossip_mix_preserves_node_mean(rng):
+    """Doubly stochastic W preserves the column mean — the conservation law
+    that makes gossip an unbiased FedAvg stand-in."""
+    for kind in sorted(TOPOLOGIES):
+        n, N = 9, 33
+        x = jnp.asarray(rng.normal(size=(n, N)).astype(np.float32))
+        idx, w = _plan_arrays(kind, n)
+        out = gossip_mix(x, idx, w, interpret=True)
+        np.testing.assert_allclose(
+            out.mean(axis=0), x.mean(axis=0), atol=1e-5
+        )
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(3, 10), N=st.integers(4, 120),
+       seed=st.integers(0, 2**31 - 1))
+def test_gossip_mix_hypothesis(n, N, seed):
+    r = np.random.default_rng(seed)
+    kind = ["ring", "full", "random"][seed % 3]
+    topo = TOPOLOGIES[kind]() if kind != "random" else TOPOLOGIES[kind](
+        p=0.4, seed=seed % 97
+    )
+    plan = topo.build(n)
+    x = jnp.asarray(r.normal(size=(n, N)).astype(np.float32))
+    idx, w = jnp.asarray(plan.idx), jnp.asarray(plan.weight)
+    out = gossip_mix(x, idx, w, block_nodes=4, block_n=32, interpret=True)
+    np.testing.assert_allclose(out, gossip_mix_ref(x, idx, w), atol=1e-5)
+
+
+def test_gossip_mix_rejects_bad_inputs(rng):
+    x = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+    idx, w = _plan_arrays("ring", 4)
+    with pytest.raises(ValueError, match="row-stochastic"):
+        gossip_mix(x, idx, w * 2.0, interpret=True)
+    with pytest.raises(ValueError, match="max_slots"):
+        gossip_mix(x, idx[:, :1], w, interpret=True)
+    with pytest.raises(ValueError, match="max_slots"):
+        gossip_mix(x, idx[:2], w[:2], interpret=True)
+
+
+def test_tree_gossip_mix_matches_flat_kernel(rng):
+    """ops.tree_gossip_mix == ravel -> gossip_mix -> unravel on a real
+    model pytree (the engine's mixing step)."""
+    from repro.models import mnist_2nn
+    from repro.utils.tree import tree_ravel_stacked
+
+    model = mnist_2nn(n_classes=3, d_in=6)
+    stacked = jax.vmap(lambda s: model.init(jax.random.PRNGKey(s)))(
+        jnp.arange(5)
+    )
+    idx, w = _plan_arrays("ring", 5)
+    mixed = ops.tree_gossip_mix(stacked, idx, w, interpret=True)
+    flat, _ = tree_ravel_stacked(stacked)
+    want = gossip_mix_ref(flat, idx, w)
+    got, _ = tree_ravel_stacked(mixed)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    assert jax.tree.structure(mixed) == jax.tree.structure(stacked)

@@ -1,0 +1,187 @@
+"""Topology subsystem: registry/JSON round-trip, Metropolis–Hastings
+doubly-stochastic weights for every kind, structure sanity (degrees,
+padding, degenerate shapes)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.topology import (
+    TOPOLOGIES,
+    FullTopology,
+    RandomTopology,
+    RingTopology,
+    SmallWorldTopology,
+    TorusTopology,
+    resolve_topology,
+    topology_from_json,
+    topology_to_json,
+)
+
+ALL_KINDS = sorted(TOPOLOGIES)
+
+
+# ---------------------------------------------------------------------------
+# registry / serialization (mirrors test_strategies.py)
+# ---------------------------------------------------------------------------
+
+def test_registry_kinds_complete():
+    assert ALL_KINDS == ["full", "random", "ring", "smallworld", "torus"]
+    for kind, cls in TOPOLOGIES.items():
+        assert cls.kind == kind
+        assert dataclasses.is_dataclass(cls) or kind in ("full", "torus")
+
+
+@pytest.mark.parametrize("topo", [
+    RingTopology(),
+    RingTopology(degree=4),
+    TorusTopology(),
+    SmallWorldTopology(degree=4, rewire=0.3, seed=7),
+    RandomTopology(p=0.2, seed=5),
+    FullTopology(),
+])
+def test_json_round_trip(topo):
+    d = topology_to_json(topo)
+    assert d["kind"] == topo.kind
+    assert topology_from_json(d) == topo
+    # .name is the canonical sorted-keys form the checkpoint guard compares
+    assert topology_from_json(__import__("json").loads(topo.name)) == topo
+
+
+def test_from_json_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown topology"):
+        topology_from_json({"kind": "hypercube"})
+
+
+def test_resolve_topology():
+    assert resolve_topology("ring") == RingTopology()
+    t = SmallWorldTopology(rewire=0.5)
+    assert resolve_topology(t) is t
+    with pytest.raises(ValueError, match="unknown topology"):
+        resolve_topology("star")
+    with pytest.raises(TypeError):
+        resolve_topology(42)
+
+
+# ---------------------------------------------------------------------------
+# the mixing-plan invariants (docs/topology.md)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+@pytest.mark.parametrize("n", [5, 8, 16, 17])
+def test_mh_weights_doubly_stochastic(kind, n):
+    """The load-bearing invariant for every kind: MH weights are
+    symmetric and row-stochastic, hence doubly stochastic — the property
+    that makes gossip preserve the node-mean and contract to consensus."""
+    plan = TOPOLOGIES[kind]().build(n)
+    W = plan.dense().astype(np.float64)
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-6)
+    np.testing.assert_allclose(W.sum(axis=0), 1.0, atol=1e-6)
+    np.testing.assert_allclose(W, W.T, atol=1e-6)
+    assert (W >= -1e-7).all()
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_plan_padding_contract(kind):
+    """Padded slots carry idx == self and weight == 0; real slots point at
+    genuine neighbors; every row includes exactly one self slot with the
+    MH completion weight."""
+    n = 12
+    topo = TOPOLOGIES[kind]()
+    plan = topo.build(n)
+    assert plan.idx.shape == plan.weight.shape == (n, plan.max_slots)
+    assert plan.idx.dtype == np.int32
+    assert plan.weight.dtype == np.float32
+    assert (plan.idx >= 0).all() and (plan.idx < n).all()
+    nbrs = topo.neighbor_sets(n)
+    for i in range(n):
+        live = plan.weight[i] > 0
+        slots = set(plan.idx[i][live].tolist())
+        # live slots = self + the adjacency (self weight can be 0 only on
+        # a regular graph where MH assigns the full row to neighbors —
+        # e.g. the full graph's 1/n rows still include self, so check
+        # against the padded-idx convention instead of membership).
+        assert slots - {i} <= nbrs[i]
+        assert (plan.idx[i][~live] == i).all() or plan.weight[i][~live].sum() == 0
+
+
+def test_full_topology_is_uniform():
+    """MH on K_n is exactly 1/n everywhere — the bridge to centralized
+    FedAvg that the engine-equivalence test leans on."""
+    for n in (2, 5, 9):
+        W = FullTopology().build(n).dense()
+        np.testing.assert_allclose(W, np.full((n, n), 1.0 / n), atol=1e-7)
+
+
+def test_ring_structure_and_degrees():
+    topo = RingTopology(degree=2)
+    n = 10
+    deg = topo.degrees(n)
+    np.testing.assert_array_equal(deg, 2)
+    nbrs = topo.neighbor_sets(n)
+    assert nbrs[0] == {1, 9}
+    assert nbrs[4] == {3, 5}
+    # symmetry
+    for i, s in enumerate(nbrs):
+        for j in s:
+            assert i in nbrs[j]
+
+
+def test_torus_degenerate_shapes_are_safe():
+    """1 x n and 2 x n factorizations dedupe wrap-around edges instead of
+    producing self-loops or doubled edges."""
+    assert TorusTopology.shape(12) == (3, 4)
+    assert TorusTopology.shape(7) == (1, 7)   # prime -> 1 x n ring
+    nbrs = TorusTopology().neighbor_sets(7)
+    for i, s in enumerate(nbrs):
+        assert i not in s
+        assert s == {(i - 1) % 7, (i + 1) % 7}
+    # 2 x 2: every node has the other 3 at most once
+    nbrs = TorusTopology().neighbor_sets(4)
+    for i, s in enumerate(nbrs):
+        assert i not in s and len(s) <= 3
+
+
+def test_smallworld_seeded_and_symmetric():
+    a = SmallWorldTopology(degree=4, rewire=0.5, seed=3)
+    b = SmallWorldTopology(degree=4, rewire=0.5, seed=3)
+    c = SmallWorldTopology(degree=4, rewire=0.5, seed=4)
+    n = 20
+    assert a.neighbor_sets(n) == b.neighbor_sets(n)
+    assert a.neighbor_sets(n) != c.neighbor_sets(n)
+    nbrs = a.neighbor_sets(n)
+    for i, s in enumerate(nbrs):
+        assert i not in s
+        for j in s:
+            assert i in nbrs[j]
+    # rewire=0 is exactly the ring
+    assert SmallWorldTopology(degree=4, rewire=0.0).neighbor_sets(n) == \
+        RingTopology(degree=4).neighbor_sets(n)
+
+
+def test_random_no_isolated_nodes():
+    """Even at p ~ 0 the ER fix-up attaches every node somewhere (an
+    isolated node would break the MH row and never learn)."""
+    topo = RandomTopology(p=0.01, seed=0)
+    deg = topo.degrees(30)
+    assert (deg >= 1).all()
+    plan = topo.build(30)
+    W = plan.dense()
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("topo,err", [
+    (RingTopology(degree=3), "even"),
+    (RingTopology(degree=0), "even"),
+    (RingTopology(degree=10), "n_nodes > degree"),
+    (SmallWorldTopology(rewire=1.5), "rewire"),
+    (RandomTopology(p=-0.1), "p must be"),
+])
+def test_validate_refuses_degenerate(topo, err):
+    with pytest.raises(ValueError, match=err):
+        topo.build(8)
+
+
+def test_validate_refuses_tiny_population():
+    with pytest.raises(ValueError, match="n_nodes >= 2"):
+        FullTopology().build(1)
